@@ -1,0 +1,96 @@
+"""Kernel benchmarks.  On this CPU container Pallas runs in interpret mode,
+so wall-clock favours the jnp reference — the meaningful numbers here are
+(a) correctness deltas vs the oracle at serving-relevant shapes, and
+(b) the analytic per-tile VMEM footprint + arithmetic intensity that the
+BlockSpecs claim on the TPU target (checked against the 16 MiB v5e VMEM
+budget).  Real-TPU wall-time belongs to the roofline table (§Roofline)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+VMEM_BUDGET = 16 * 2 ** 20        # v5e per-core VMEM
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)                                     # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # flash attention: tile VMEM + error at a serving shape
+    from repro.kernels.flash_attention import flash_attention as fk
+    from repro.kernels.flash_attention import ops as fops
+    from repro.kernels.flash_attention import ref as fref
+    bq, bk, dh = fk.DEFAULT_BLOCK_Q, fk.DEFAULT_BLOCK_K, 128
+    vmem = (bq * dh + 2 * bk * dh) * 4 + (bq * dh + 2 * bq) * 4 \
+        + bq * bk * 4
+    q = jnp.asarray(rng.standard_normal((1, 512, 8, dh)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 512, 2, dh)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 512, 2, dh)), jnp.bfloat16)
+    t_k = _time(lambda: fops.flash_attention(q, k, v))
+    err = float(jnp.max(jnp.abs(
+        fops.flash_attention(q, k, v).astype(jnp.float32)
+        - fref.gqa_attention(q, k, v).astype(jnp.float32))))
+    # causal flash: ~(S^2/2)*4*H*Dh flops over (S^2)*Hkv*Dh*2*2 ref bytes
+    intensity = (0.5 * 4 * dh) / (2 * 2)
+    rows.append(("kernel/flash_attn_512", t_k * 1e6,
+                 f"vmem_tile={vmem/2**20:.2f}MiB_of_16MiB_"
+                 f"err={err:.1e}_AI={intensity:.0f}f/B"))
+    assert vmem < VMEM_BUDGET
+
+    # rwkv6 chunked scan
+    from repro.kernels.rwkv6_scan import ops as rops
+    from repro.kernels.rwkv6_scan import ref as rref
+    b, s, h, d = 1, 256, 4, 64
+    r_ = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k_ = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    v_ = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    w_ = jnp.asarray(rng.uniform(0.9, 0.999, (b, s, h, d)), jnp.float32)
+    u_ = jnp.asarray(rng.standard_normal((h, d)), jnp.float32)
+    t_k = _time(lambda: rops.wkv6(r_, k_, v_, w_, u_))
+    y, _ = rops.wkv6(r_, k_, v_, w_, u_)
+    yr, _ = rref.wkv6(r_, k_, v_, w_, u_,
+                      jnp.zeros((b, h, d, d), jnp.float32))
+    err = float(jnp.max(jnp.abs(y - yr)))
+    chunk_vmem = (4 * 64 * d + d * d + 64 * 64) * 4
+    rows.append(("kernel/rwkv6_scan_256", t_k * 1e6,
+                 f"vmem_tile={chunk_vmem/2**20:.3f}MiB_err={err:.1e}"))
+
+    # mamba selective scan
+    from repro.kernels.mamba_scan import ops as mops
+    from repro.kernels.mamba_scan import ref as mref
+    b, s, di, n = 1, 128, 256, 16
+    u2 = jnp.asarray(rng.standard_normal((b, s, di)), jnp.float32)
+    dt2 = jnp.asarray(rng.uniform(0.001, 0.1, (b, s, di)), jnp.float32)
+    a2 = jnp.asarray(-rng.uniform(0.5, 2, (di, n)), jnp.float32)
+    b2 = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    c2 = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    t_k = _time(lambda: mops.selective_scan(u2, dt2, a2, b2, c2))
+    y, _ = mops.selective_scan(u2, dt2, a2, b2, c2)
+    yr, _ = mref.selective_scan(u2, dt2, a2, b2, c2,
+                                jnp.zeros((b, di, n), jnp.float32))
+    err = float(jnp.max(jnp.abs(y - yr)))
+    rows.append(("kernel/mamba_scan_128", t_k * 1e6, f"err={err:.1e}"))
+
+    # quant cast: wire-byte reduction
+    from repro.kernels.quant_cast import ops as qops
+    x = jnp.asarray(rng.standard_normal(1 << 16), jnp.float32)
+    t_k = _time(lambda: qops.quantize(x))
+    qv, sc = qops.quantize(x)
+    ratio = x.nbytes / (qv.nbytes + sc.nbytes)
+    back = qops.dequantize(qv, sc, x.shape)
+    err = float(jnp.max(jnp.abs(back - x)))
+    rows.append(("kernel/quant_cast_64k", t_k * 1e6,
+                 f"compress={ratio:.2f}x_err={err:.2e}"))
+    return rows

@@ -1,0 +1,44 @@
+"""Migration-route matrix (paper §V.C): binary vs staged vs quant casts
+across object sizes — bytes/second per route.  The binary:staged gap is the
+paper's 'efficient binary migration' claim; quant shows the beyond-paper
+int8 re-coding cast (4x wire-byte reduction at bounded error)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import datamodel as dm
+from repro.core.api import default_deployment
+from repro.core.migrator import MigrationParams
+
+
+def run(sizes=(1_000, 30_000), reps: int = 5) -> List[Tuple[str, float,
+                                                            str]]:
+    bd = default_deployment()
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        table = dm.Table({
+            "id": jnp.asarray(np.arange(n)),
+            "val": jnp.asarray(rng.standard_normal(n)),
+        })
+        bd.engines["hoststore0"].put(f"tbl_{n}", table)
+        nbytes = table.nbytes()
+        for method in ("binary", "staged", "quant"):
+            dst = bd.engines["kvstore0" if method == "quant"
+                             else "densehbm0"]
+            ts = []
+            for i in range(reps):
+                t0 = time.perf_counter()
+                bd.migrator.migrate(
+                    bd.engines["hoststore0"], f"tbl_{n}", dst,
+                    f"out_{method}_{n}_{i}",
+                    MigrationParams(method=method))
+                ts.append(time.perf_counter() - t0)
+            med = float(np.median(ts))
+            rows.append((f"migration/{method}_n{n}", med * 1e6,
+                         f"MBps={nbytes/med/1e6:.1f}"))
+    return rows

@@ -1,0 +1,61 @@
+"""Paper Fig. 6 reproduction: execution-time distributions for eight query
+classes x N runs — single-island vs intra-island-migration vs cross-island-
+migration queries.  Expected ordering (paper §VII): migration queries are
+slower; same-data-model (binary) migration is fast; cross-island staged
+migration pays format translation."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.api import default_deployment
+from repro.data.mimic import load_mimic_demo
+
+QUERIES = {
+    "q1_rel_limit": "bdrel(select * from mimic2v26.d_patients limit 4)",
+    "q2_rel_filter": ("bdrel(select poe_id, dose from mimic2v26.poe_order"
+                      " where dose > 25)"),
+    "q3_rel_groupby": ("bdrel(select sex, avg(dob_year) from"
+                       " mimic2v26.d_patients group by sex)"),
+    "q4_array_filter": "bdarray(filter(myarray, dim1>150))",
+    "q5_array_agg": "bdarray(aggregate(mimic2v26.waveform, avg(signal)))",
+    "q6_text_range": ("bdtext({ 'op' : 'range', 'table' : 'mimic_logs',"
+                      " 'range' : { 'start' : ['r_0001','',''],"
+                      " 'end' : ['r_0015','',''] } })"),
+    "q7_cast_rel_to_array": (
+        "bdarray(scan(bdcast(bdrel(select poe_id, subject_id from"
+        " mimic2v26.poe_order), c7,"
+        " '<subject_id:int32>[poe_id=0:*,10000000,0]', array)))"),
+    "q8_cast_array_to_rel": (
+        "bdrel(select * from bdcast(bdarray(filter(myarray, dim1>10)),"
+        " c8, '', relational) limit 5)"),
+}
+
+MIGRATION_CLASSES = ("q7_cast_rel_to_array", "q8_cast_array_to_rel")
+
+
+def run(runs: int = 50) -> List[Tuple[str, float, str]]:
+    bd = default_deployment()
+    load_mimic_demo(bd, num_orders=4096)
+    rows = []
+    medians = {}
+    for name, q in QUERIES.items():
+        bd.query(q, training=True)
+        ts = []
+        for _ in range(runs):
+            r = bd.query(q)
+            ts.append(sum(s for n, s in r.stages))
+        ts = np.asarray(ts)
+        medians[name] = float(np.median(ts))
+        rows.append((f"fig6/{name}", float(np.median(ts)) * 1e6,
+                     f"p25={np.percentile(ts,25)*1e6:.0f}us_"
+                     f"p75={np.percentile(ts,75)*1e6:.0f}us"))
+    single = [v for k, v in medians.items() if k not in MIGRATION_CLASSES]
+    mig = [v for k, v in medians.items() if k in MIGRATION_CLASSES]
+    rows.append(("fig6/check_migration_slower",
+                 0.0,
+                 f"median_mig={np.median(mig)*1e6:.0f}us>"
+                 f"median_single={np.median(single)*1e6:.0f}us="
+                 f"{np.median(mig) > np.median(single)}"))
+    return rows

@@ -1,0 +1,60 @@
+"""Planner/Monitor benchmarks (paper §V.B/§V.E): training-mode exploration
+cost vs lean-mode steady-state, monitor lookup latency, and closest-
+signature hit quality on perturbed queries."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import bql, signatures
+from repro.core.api import default_deployment
+from repro.data.mimic import load_mimic_demo
+
+BASE = ("bdarray(scan(bdcast(bdrel(select poe_id, subject_id from"
+        " mimic2v26.poe_order), c, "
+        "'<subject_id:int32>[poe_id=0:*,1000,0]', array)))")
+PERTURBED = [
+    BASE.replace("subject_id", "icustay_id"),
+    BASE.replace("0:*,1000,0", "0:*,5000,0"),
+    ("bdarray(scan(bdcast(bdrel(select poe_id, dose from"
+     " mimic2v26.poe_order where dose > 10), c,"
+     " '<dose:double>[poe_id=0:*,1000,0]', array)))"),
+]
+
+
+def run(runs: int = 20) -> List[Tuple[str, float, str]]:
+    bd = default_deployment()
+    load_mimic_demo(bd, num_orders=2048)
+    rows = []
+
+    t0 = time.perf_counter()
+    r = bd.query(BASE, training=True)
+    t_train = time.perf_counter() - t0
+    rows.append(("planner/training_mode", t_train * 1e6,
+                 f"plans={r.plans_considered}"))
+
+    ts = []
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        bd.query(BASE)
+        ts.append(time.perf_counter() - t0)
+    rows.append(("planner/lean_mode", float(np.median(ts)) * 1e6,
+                 f"speedup={t_train/np.median(ts):.1f}x"))
+
+    # monitor signature matching on perturbed queries
+    base_sig = signatures.of_query(bql.parse(BASE))
+    hits = 0
+    lookup_ts = []
+    for q in PERTURBED:
+        sig = signatures.of_query(bql.parse(q))
+        t0 = time.perf_counter()
+        closest = bd.monitor.get_closest_signature(sig)
+        lookup_ts.append(time.perf_counter() - t0)
+        if closest is not None and closest.distance(base_sig) < 1e-9:
+            hits += 1
+    rows.append(("monitor/closest_signature",
+                 float(np.median(lookup_ts)) * 1e6,
+                 f"hits={hits}/{len(PERTURBED)}"))
+    return rows

@@ -1,0 +1,129 @@
+"""Regenerates the generated sections of EXPERIMENTS.md (§Dry-run table,
+§Roofline table) from experiments/dryrun_results.jsonl.
+
+  PYTHONPATH=src python -m benchmarks.render_report
+"""
+from __future__ import annotations
+
+import json
+import re
+
+from benchmarks import roofline
+
+EXP = "EXPERIMENTS.md"
+
+
+def dryrun_table() -> str:
+    rows = {}
+    for cell in roofline.load_cells():
+        rows[(cell["arch"], cell["shape"], cell["mesh"])] = cell
+    lines = [
+        "| arch | shape | mesh | status | compile s | devices | ubatch |"
+        " args GiB/dev | temp GiB/dev | collective ops |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(rows):
+        r = rows[key]
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | skipped |"
+                f" — | — | — | — | — | {r['reason'][:40]}… |")
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+                f" {r['status']} | — | — | — | — | — | — |")
+            continue
+        mem = r["memory"]
+        coll = r.get("collectives", {})
+        nops = sum(v["count"] for k, v in coll.items()
+                   if isinstance(v, dict))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok |"
+            f" {r['compile_seconds']} | {r['devices']} |"
+            f" {r.get('microbatches', '—')} |"
+            f" {mem['argument_bytes']/2**30:.2f} |"
+            f" {mem['temp_bytes']/2**30:.2f} |"
+            f" {nops if coll else '—'} |")
+    return "\n".join(lines)
+
+
+PERF_CELLS = {
+    "A": ("deepseek-coder-33b", "train_4k", 6),
+    "B": ("seamless-m4t-medium", "train_4k", 6),
+    "C": ("command-r-plus-104b", "decode_32k", 2),
+}
+
+
+def _terms(r, mult):
+    f = r["flops_per_device"]
+    b = r["bytes_per_device"]
+    c = r["collectives"]["total_bytes"]
+    model = mult * r["n_active"] * r["tokens"] / r["devices"]
+    step = max(f / roofline.PEAK_FLOPS, b / roofline.HBM_BW,
+               c / roofline.ICI_BW)
+    return (f / roofline.PEAK_FLOPS, b / roofline.HBM_BW,
+            c / roofline.ICI_BW, (model / roofline.PEAK_FLOPS) / step)
+
+
+def perf_final_table() -> str:
+    import os
+    v1 = {(c["arch"], c["shape"], c["mesh"]): c for c in roofline.load_cells(
+        "experiments/dryrun_results_v1_noconstraints.jsonl")}
+    v2 = {(c["arch"], c["shape"], c["mesh"]): c for c in
+          roofline.load_cells()}
+    opt = {}
+    if os.path.exists("experiments/perf_log.jsonl"):
+        with open("experiments/perf_log.jsonl") as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("status") == "ok" and r.get("iteration") == 5:
+                    opt[r["cell"]] = r
+    lines = [
+        "| cell | variant | compute s | memory s | collective s |"
+        " roofline frac | Δ dominant vs paper-faithful |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for cell, (arch, shape, mult) in PERF_CELLS.items():
+        key = (arch, shape, "16x16")
+        rows = [("paper-faithful v1 (propagation-only)", v1.get(key)),
+                ("v2 baseline (constraint system active)", v2.get(key)),
+                ("beyond-paper optimized", opt.get(cell))]
+        base_dom = None
+        for name, r in rows:
+            if r is None or "flops_per_device" not in r:
+                continue
+            t = _terms(r, mult)
+            dom = max(t[:3])
+            if base_dom is None:
+                base_dom = dom
+            lines.append(
+                f"| {cell} {arch}×{shape} | {name} | {t[0]:.3f} |"
+                f" {t[1]:.3f} | {t[2]:.3f} | {t[3]:.4f} |"
+                f" {base_dom/dom:.1f}× |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    with open(EXP) as f:
+        text = f.read()
+    roof = roofline.markdown()
+    text = re.sub(
+        r"<!-- PERF_FINAL_TABLE -->.*?(?=\n### |\n## |\Z)",
+        "<!-- PERF_FINAL_TABLE -->\n\n" + perf_final_table() + "\n\n",
+        text, flags=re.DOTALL)
+    text = re.sub(
+        r"<!-- ROOFLINE_TABLE -->.*?(?=\n### What would|\n## |\Z)",
+        "<!-- ROOFLINE_TABLE -->\n\n" + roof + "\n\n"
+        "(terms in seconds/step on the 16x16 mesh; decode cells are "
+        "seconds/token — see per-cell notes below)\n\n"
+        "### Dry-run cell matrix (both meshes)\n\n" + dryrun_table()
+        + "\n\n",
+        text, flags=re.DOTALL)
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("rendered §Roofline + §Dry-run tables into", EXP)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Roofline analysis (deliverable (g)): reads the dry-run JSONL and derives
+the three per-device roofline terms per (arch x shape) cell:
+
+  compute term    = flops_per_device / PEAK_FLOPS          (197 TF/s bf16)
+  memory term     = bytes_per_device / HBM_BW              (819 GB/s)
+  collective term = collective_wire_bytes_per_device / ICI (50 GB/s/link)
+
+Conventions (see EXPERIMENTS.md §Dry-run methodology):
+* cost_analysis is post-SPMD per-device, so no further /chips division;
+* collective wire bytes use ring-cost factors parsed from replica_groups;
+* MODEL_FLOPS = 6*N_active*tokens (train) or 2*N_active*tokens (serve) —
+  the useful-FLOPs yardstick; ratio MODEL/HLO exposes remat + reference-
+  attention + redundant-compute waste.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+DEFAULT_PATH = os.path.join("experiments", "dryrun_results.jsonl")
+
+
+def load_cells(path: str = DEFAULT_PATH) -> List[dict]:
+    cells = {}
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (r.get("arch"), r.get("shape"), r.get("mesh"))
+            cells[key] = r                      # last write wins (resume)
+    return list(cells.values())
+
+
+def terms(cell: dict) -> Optional[dict]:
+    if cell.get("status") != "ok" or "flops_per_device" not in cell:
+        return None
+    flops = cell["flops_per_device"]
+    bytes_ = cell["bytes_per_device"]
+    coll = cell.get("collectives", {}).get("total_bytes", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_n = coll / ICI_BW
+    dominant = max((("compute", t_c), ("memory", t_m),
+                    ("collective", t_n)), key=lambda kv: kv[1])[0]
+    mult = {"train": 6, "prefill": 2, "decode": 2}[cell["kind"]]
+    model_flops = mult * cell["n_active"] * cell["tokens"] \
+        / cell["devices"]
+    ratio = model_flops / flops if flops else 0.0
+    # roofline fraction: useful model flops vs the time the dominant term
+    # pins the step at (how close the step is to the compute roofline)
+    step_time = max(t_c, t_m, t_n)
+    frac = (model_flops / PEAK_FLOPS) / step_time if step_time else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "kind": cell["kind"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dominant, "model_flops_per_dev": model_flops,
+        "hlo_flops_per_dev": flops, "model_hlo_ratio": ratio,
+        "roofline_fraction": frac,
+        "mem_args_gib": cell["memory"]["argument_bytes"] / 2 ** 30,
+        "mem_temp_gib": cell["memory"]["temp_bytes"] / 2 ** 30,
+    }
+
+
+def table(path: str = DEFAULT_PATH) -> List[dict]:
+    out = []
+    for cell in load_cells(path):
+        t = terms(cell)
+        if t is not None:
+            out.append(t)
+    return sorted(out, key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+
+def markdown(path: str = DEFAULT_PATH) -> str:
+    rows = table(path)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant |"
+        " MODEL/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} |"
+            f" {r['memory_s']:.3f} | {r['collective_s']:.3f} |"
+            f" {r['dominant']} | {r['model_hlo_ratio']:.2f} |"
+            f" {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    for r in table():
+        if r["mesh"] != "16x16":
+            continue
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"dom={r['dominant']}_frac={r['roofline_fraction']:.3f}"))
+    if not rows:
+        rows.append(("roofline/missing", 0.0,
+                     "run launch.drive_dryrun first"))
+    return rows

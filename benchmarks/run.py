@@ -1,0 +1,60 @@
+"""Benchmark harness (deliverable (d)): one module per paper table/figure
+plus migration matrix, kernels, planner/monitor, and the dry-run roofline
+reader.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SUITES = ("fig5", "fig6", "migration", "kernels", "planner", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated subset of " + ",".join(SUITES))
+    ap.add_argument("--runs", type=int, default=50,
+                    help="repetitions for fig5/fig6 (paper uses 50)")
+    args = ap.parse_args()
+    selected = args.only.split(",") if args.only else list(SUITES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        try:
+            if name == "fig5":
+                from benchmarks import paper_fig5
+                rows = paper_fig5.run(runs=args.runs)
+            elif name == "fig6":
+                from benchmarks import paper_fig6
+                rows = paper_fig6.run(runs=args.runs)
+            elif name == "migration":
+                from benchmarks import migration_matrix
+                rows = migration_matrix.run()
+            elif name == "kernels":
+                from benchmarks import kernel_bench
+                rows = kernel_bench.run()
+            elif name == "planner":
+                from benchmarks import planner_monitor
+                rows = planner_monitor.run()
+            elif name == "roofline":
+                from benchmarks import roofline
+                rows = roofline.run()
+            else:
+                print(f"unknown suite {name}", file=sys.stderr)
+                continue
+            for row_name, us, derived in rows:
+                print(f"{row_name},{us:.1f},{derived}")
+        except Exception:                                 # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

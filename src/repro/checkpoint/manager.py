@@ -1,0 +1,127 @@
+"""Checkpointing: async sharded save, atomic manifest promote, keep-last-k,
+and **elastic restore** — a checkpoint written under one mesh restores onto
+any other mesh (leaves are saved as global arrays; restore re-shards via
+device_put with the new NamedSharding).  This is the restart path for node
+failures and for elastic re-scaling (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3) -> None:
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pending: Optional[threading.Thread] = None
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, state, *, blocking: bool = True) -> str:
+        """Write state under <dir>/step_<n>.tmp then atomically promote."""
+        host_state = jax.tree.map(np.asarray, jax.device_get(state))
+        if blocking:
+            return self._write(step, host_state)
+        self.wait()
+        self._pending = threading.Thread(
+            target=self._write, args=(step, host_state), daemon=True)
+        self._pending.start()
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _write(self, step: int, host_state) -> str:
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten_with_paths(host_state)
+        manifest = {"step": step, "leaves": {}, "time": time.time()}
+        for key, leaf in flat.items():
+            fname = key.replace("/", "__") + ".npy"
+            arr = np.asarray(leaf)
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"][key] = {
+                "file": fname, "shape": list(arr.shape),
+                "dtype": str(arr.dtype)}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)              # atomic promote
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the structure of ``template``.  When ``shardings``
+        (a matching pytree of NamedShardings) is given, each leaf is placed
+        with device_put — this is what makes restore *elastic*: the target
+        mesh may differ from the one that wrote the checkpoint."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        flat_template = _flatten_with_paths(template)
+        flat_shard = (_flatten_with_paths(shardings)
+                      if shardings is not None else {})
+        restored = {}
+        for key in flat_template:
+            meta = manifest["leaves"][key]
+            arr = np.load(os.path.join(path, meta["file"]))
+            if key in flat_shard and flat_shard[key] is not None:
+                restored[key] = jax.device_put(arr, flat_shard[key])
+            else:
+                restored[key] = jax.numpy.asarray(arr)
+
+        # rebuild the tree in template order
+        leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(
+            template)
+        ordered = []
+        for pth, _ in leaves_paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in pth)
+            ordered.append(restored[key])
+        return jax.tree_util.tree_unflatten(treedef, ordered), step

@@ -1,0 +1,66 @@
+"""Administrative interface (paper §IV): start, stop and view the status
+of a BigDAWG setup.  Programmatic API + a small CLI:
+
+  PYTHONPATH=src python -m repro.core.admin status
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any, Dict
+
+from repro.core.api import BigDawg, default_deployment
+from repro.core import datamodel as dm
+
+
+def status(bd: BigDawg) -> Dict[str, Any]:
+    """Deployment status: engines, islands, objects, monitor health."""
+    out: Dict[str, Any] = {"engines": {}, "islands": {}, "monitor": {}}
+    for name, engine in bd.engines.items():
+        objs = engine.list_objects()
+        out["engines"][name] = {
+            "kind": engine.kind,
+            "objects": len(objs),
+            "bytes": int(sum(
+                dm.object_nbytes(engine.get(o)) for o in objs)),
+            "ops_logged": len(engine.op_log),
+        }
+    for isl in bd.catalog.islands.values():
+        out["islands"][isl.name] = [
+            e.name for e in bd.catalog.engines_for_island(isl.name)]
+    out["monitor"] = {
+        "engine_ewma_ms": {k: round(v * 1e3, 3)
+                           for k, v in bd.monitor.engine_ewma.items()},
+        "stragglers": bd.monitor.stragglers(),
+        "monitoring_task_running": bd.monitoring_task is not None,
+    }
+    out["catalog"] = {t: len(getattr(bd.catalog, t))
+                      for t in bd.catalog.TABLES}
+    return out
+
+
+def start(bd: BigDawg, interval_seconds: float = 30.0) -> None:
+    """Start the background MonitoringTask daemon (paper §V.E)."""
+    task = bd.start_monitoring(interval_seconds)
+    task.start()
+
+
+def stop(bd: BigDawg) -> None:
+    if bd.monitoring_task is not None:
+        bd.monitoring_task.stop()
+        bd.monitoring_task = None
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="BigDAWG admin interface")
+    ap.add_argument("command", choices=("status", "demo-status"))
+    args = ap.parse_args()
+    bd = default_deployment()
+    if args.command == "demo-status":
+        from repro.data.mimic import load_mimic_demo
+        load_mimic_demo(bd)
+    print(json.dumps(status(bd), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,244 @@
+"""Tensor storage engines — the heterogeneous "database engines" of the
+polystore (DESIGN.md §2 table):
+
+  DenseHBMEngine   (SciDB analog)      device-HBM sharded arrays, MXU ops
+  HostStoreEngine  (PostgreSQL analog) host-DRAM tables / fp32 master state
+  KVStoreEngine    (Accumulo analog)   paged KV store, optional int8 codec
+  ReplicatedEngine                     small replicated tensors
+
+All engines share the Engine interface: named-object storage, binary/staged
+import & export (the Migrator moves data through these), and per-op metrics
+(fed to the Monitor).  "Integration" in the paper's sense = all engines are
+registered in one Catalog and reachable through islands + casts.
+"""
+from __future__ import annotations
+
+import io
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import datamodel as dm
+
+
+class Engine:
+    kind = "abstract"
+    islands: Tuple[str, ...] = ()
+
+    def __init__(self, name: str, mesh=None, rules=None) -> None:
+        self.name = name
+        self.mesh = mesh
+        self.rules = rules
+        self._objects: Dict[str, Any] = {}
+        self.op_log: List[Tuple[str, float]] = []     # (op, seconds)
+
+    # -- object store --------------------------------------------------------
+    def put(self, name: str, obj: Any) -> None:
+        self._objects[name] = self._place(obj)
+
+    def get(self, name: str) -> Any:
+        return self._objects[name]
+
+    def has(self, name: str) -> bool:
+        return name in self._objects
+
+    def delete(self, name: str) -> None:
+        self._objects.pop(name, None)
+
+    def list_objects(self) -> List[str]:
+        return sorted(self._objects)
+
+    def _place(self, obj: Any) -> Any:
+        return obj
+
+    def record(self, op: str, seconds: float) -> None:
+        self.op_log.append((op, seconds))
+
+    # -- migration formats ----------------------------------------------------
+    def export_binary(self, name: str) -> Tuple[Any, Dict[str, Any]]:
+        """Zero-copy handoff: (payload, schema). Fast path of the Migrator."""
+        obj = self._objects[name]
+        return obj, {"kind": dm.object_kind(obj)}
+
+    def import_binary(self, name: str, payload: Any,
+                      schema: Dict[str, Any]) -> None:
+        self.put(name, payload)
+
+    def export_staged(self, name: str) -> Tuple[bytes, Dict[str, Any]]:
+        """Format-translating slow path (the paper's CSV-style migration)."""
+        obj = self._objects[name]
+        kind = dm.object_kind(obj)
+        buf = io.StringIO()
+        if kind == "table":
+            cols = list(obj.columns)
+            buf.write(",".join(cols) + "\n")
+            mat = np.stack([np.asarray(obj.columns[c], dtype=np.float64)
+                            for c in cols], axis=1)
+            np.savetxt(buf, mat, delimiter=",", fmt="%.17g")
+            return buf.getvalue().encode(), {"kind": kind, "columns": cols}
+        if kind == "array":
+            names = list(obj.attrs)
+            shape = obj.shape
+            mat = np.stack([np.asarray(obj.attrs[n], dtype=np.float64
+                                       ).reshape(-1) for n in names], axis=1)
+            np.savetxt(buf, mat, delimiter=",", fmt="%.17g")
+            return buf.getvalue().encode(), {
+                "kind": kind, "attrs": names, "shape": list(shape),
+                "dims": list(obj.dim_names)}
+        if kind == "tensor":
+            arr = np.asarray(obj, dtype=np.float64).reshape(-1)
+            np.savetxt(buf, arr[:, None], delimiter=",", fmt="%.17g")
+            return buf.getvalue().encode(), {
+                "kind": kind, "shape": list(np.asarray(obj).shape),
+                "dtype": str(obj.dtype)}
+        if kind == "kvtable":
+            lines = []
+            for k, v in obj.scan():
+                sval = (np.asarray(v).tolist() if isinstance(
+                    v, (jax.Array, np.ndarray)) else v)
+                lines.append(repr((k, sval)))
+            return "\n".join(lines).encode(), {"kind": kind}
+        raise ValueError(f"staged export unsupported for {kind}")
+
+    def import_staged(self, name: str, payload: bytes,
+                      schema: Dict[str, Any]) -> None:
+        kind = schema["kind"]
+        text = payload.decode()
+        if kind == "table":
+            lines = text.strip().splitlines()
+            cols = lines[0].split(",")
+            mat = np.loadtxt(io.StringIO("\n".join(lines[1:])),
+                             delimiter=",", ndmin=2)
+            table = dm.Table({c: jnp.asarray(mat[:, i])
+                              for i, c in enumerate(cols)})
+            self.put(name, self.coerce(table, schema))
+            return
+        if kind == "array":
+            mat = np.loadtxt(io.StringIO(text), delimiter=",", ndmin=2)
+            shape = tuple(schema["shape"])
+            attrs = {n: jnp.asarray(mat[:, i]).reshape(shape)
+                     for i, n in enumerate(schema["attrs"])}
+            arr = dm.ArrayObject(attrs, tuple(schema["dims"]))
+            self.put(name, self.coerce(arr, schema))
+            return
+        if kind == "tensor":
+            vec = np.loadtxt(io.StringIO(text), delimiter=",")
+            arr = jnp.asarray(vec, dtype=schema.get("dtype", "float32")
+                              ).reshape(tuple(schema["shape"]))
+            self.put(name, arr)
+            return
+        if kind == "kvtable":
+            import ast
+            keys, values = [], []
+            for line in text.splitlines():
+                k, v = ast.literal_eval(line)
+                keys.append(tuple(k))
+                values.append(jnp.asarray(v) if isinstance(v, list) else v)
+            self.put(name, dm.KVTable(keys, values))
+            return
+        raise ValueError(f"staged import unsupported for {kind}")
+
+    def coerce(self, obj: Any, schema: Dict[str, Any]) -> Any:
+        """Translate a foreign data-model object into this engine's model."""
+        return obj
+
+
+class DenseHBMEngine(Engine):
+    """SciDB analog: dense sharded arrays resident in device HBM."""
+    kind = "dense_hbm"
+    islands = ("array",)
+
+    def _place(self, obj: Any) -> Any:
+        if self.mesh is None or self.rules is None:
+            return obj
+        # tensors / pytrees get device placement with logical-axis shardings
+        return obj
+
+    def coerce(self, obj: Any, schema: Dict[str, Any]) -> Any:
+        if isinstance(obj, dm.Table):
+            # relational -> array: columns become attributes; the cast's
+            # destination schema names which column is the dimension
+            # (paper §VI.A-e: the user supplies the target schema to
+            # resolve cross-model ambiguity).
+            dest = schema.get("dest_schema", "")
+            dim_names = ("i",)
+            cols = dict(obj.columns)
+            if dest and "[" in dest:
+                from repro.core.shims import _parse_scidb_schema
+                _, names = _parse_scidb_schema(dest)
+                if len(names) == 1 and names[0] in cols:
+                    order = jnp.argsort(cols[names[0]])
+                    cols = {n: v[order] for n, v in cols.items()
+                            if n != names[0]}
+                    dim_names = (names[0],)
+            attrs = {n: jnp.asarray(v) for n, v in cols.items()}
+            return dm.ArrayObject(attrs, dim_names)
+        return obj
+
+
+class HostStoreEngine(Engine):
+    """PostgreSQL analog: host-DRAM rows/columns; fp32 master state."""
+    kind = "host_store"
+    islands = ("relational",)
+
+    def _place(self, obj: Any) -> Any:
+        if isinstance(obj, (jax.Array,)):
+            return np.asarray(obj)          # host residency
+        return obj
+
+    def coerce(self, obj: Any, schema: Dict[str, Any]) -> Any:
+        if isinstance(obj, dm.ArrayObject):
+            cols = {n: jnp.asarray(v).reshape(-1)
+                    for n, v in obj.attrs.items()}
+            for d in obj.dim_names:
+                if d not in cols:
+                    cols[d] = obj.dim_grid(d).reshape(-1)
+            return dm.Table(cols)
+        return obj
+
+
+class KVStoreEngine(Engine):
+    """Accumulo analog: sorted KV rows; payloads may be int8-quantized."""
+    kind = "kv_store"
+    islands = ("text",)
+
+    def coerce(self, obj: Any, schema: Dict[str, Any]) -> Any:
+        if isinstance(obj, dm.Table):
+            keys, values = [], []
+            cols = list(obj.columns)
+            n = obj.num_rows
+            first = cols[0]
+            for i in range(n):
+                row = f"r_{i:08d}"
+                for c in cols:
+                    keys.append((row, "col", c))
+                    values.append(str(np.asarray(obj.columns[c][i])))
+            return dm.KVTable(keys, values)
+        if isinstance(obj, dm.ArrayObject):
+            keys, values = [], []
+            for aname, v in obj.attrs.items():
+                flat = v.reshape(-1)
+                # page into 1k-cell chunks (Accumulo-style tablet rows)
+                for p in range(0, flat.shape[0], 1024):
+                    keys.append((f"r_{p:010d}", "attr", aname))
+                    values.append(flat[p:p + 1024])
+            return dm.KVTable(keys, values)
+        return obj
+
+
+class ReplicatedEngine(Engine):
+    """Small tensors replicated across the mesh (norm scales, biases).
+    Storage-only: it backs no island query language (islands=())."""
+    kind = "replicated"
+    islands = ()
+
+
+ENGINE_KINDS = {
+    "dense_hbm": DenseHBMEngine,
+    "host_store": HostStoreEngine,
+    "kv_store": KVStoreEngine,
+    "replicated": ReplicatedEngine,
+}

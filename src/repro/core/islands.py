@@ -1,0 +1,42 @@
+"""Islands (paper §III): data model + operations + candidate engines.
+An island provides location independence among its engines; the engine-
+native escape hatch (semantic completeness) is ``Engine.get``/``put`` plus
+each engine's own methods.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.core import datamodel as dm
+
+
+@dataclasses.dataclass(frozen=True)
+class Island:
+    name: str
+    data_model: str
+    operations: Tuple[str, ...]
+    result_type: type
+
+
+ISLANDS = {
+    "relational": Island(
+        name="relational", data_model="tables of tuples",
+        operations=("select", "project", "filter", "join", "aggregate",
+                    "group", "sort", "limit", "distinct"),
+        result_type=dm.Table),
+    "array": Island(
+        name="array", data_model="multi-dimensional arrays",
+        operations=("scan", "filter", "project", "aggregate", "cross_join",
+                    "redimension", "sort"),
+        result_type=dm.ArrayObject),
+    "text": Island(
+        name="text", data_model="sorted key-value rows",
+        operations=("scan", "range"),
+        result_type=list),
+}
+
+
+def validate_result(island_name: str, value) -> bool:
+    island = ISLANDS[island_name]
+    return isinstance(value, island.result_type)

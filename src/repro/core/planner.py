@@ -1,0 +1,168 @@
+"""The Planner (paper §V.B): coordinates all query execution.
+
+``process_query(userinput, is_training_mode)`` parses the BQL string,
+routes catalog queries to the catalog module, builds the
+CrossIslandQueryPlan, enumerates semantically-equal QEPs (engine choice per
+intra-island sub-query x cast route per migration), and either
+
+  * training mode: runs every enumerated QEP, records timings in the
+    Monitor, returns the fastest result (paper's isTrainingMode=true), or
+  * lean mode: asks the Monitor for the best QEP of the closest benchmarked
+    signature and runs only that (adding this signature as a new benchmark
+    if nothing matches — §V.E).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import bql, signatures
+from repro.core.catalog import Catalog
+from repro.core.engines import Engine
+from repro.core.executor import (Executor, QueryExecutionPlan, QueryResult,
+                                 assign_ids)
+from repro.core.migrator import Migrator
+from repro.core.monitor import Monitor
+
+MAX_ENUMERATED_PLANS = 16
+CAST_METHODS = ("binary", "staged")
+
+
+@dataclasses.dataclass
+class Response:
+    """Query Endpoint response."""
+    value: Any
+    qep_id: str
+    stages: List[Tuple[str, float]]
+    signature_key: str
+    training_mode: bool
+    plans_considered: int
+
+    @property
+    def seconds(self) -> float:
+        return sum(s for _, s in self.stages)
+
+
+class Planner:
+    def __init__(self, catalog: Catalog, engines: Dict[str, Engine],
+                 monitor: Monitor, migrator: Migrator) -> None:
+        self.catalog = catalog
+        self.engines = engines
+        self.monitor = monitor
+        self.migrator = migrator
+        self.executor = Executor(engines, migrator, monitor)
+
+    # -- plan enumeration -----------------------------------------------------
+    def _candidate_engines(self, node: bql.IslandQueryNode) -> List[str]:
+        members = [e.name for e in
+                   self.catalog.engines_for_island(node.island)]
+        members = [m for m in members if m in self.engines]
+        # restrict to engines holding the referenced base objects
+        cast_names = {c.dest_name for c in node.casts}
+        refs = [o for o in signatures._referenced_objects(node)
+                if o not in cast_names]
+        if refs:
+            holding = [m for m in members
+                       if all(self.engines[m].has(r) for r in refs)]
+            if holding:
+                members = holding
+        # straggler avoidance (Monitor feedback loop, DESIGN.md §5)
+        slow = set(self.monitor.stragglers())
+        fast = [m for m in members if m not in slow]
+        return fast or members
+
+    def _cast_candidates(self, src_engine: str, dst_engine: str
+                         ) -> List[str]:
+        src = self.catalog.engine_by_name(src_engine)
+        dst = self.catalog.engine_by_name(dst_engine)
+        if src and dst:
+            casts = self.catalog.casts_between(src.eid, dst.eid)
+            if casts:
+                return [c.method for c in casts]
+        return list(CAST_METHODS)
+
+    def enumerate_plans(self, root: bql.IslandQueryNode
+                        ) -> List[QueryExecutionPlan]:
+        nodes, casts = assign_ids(root)
+        node_ids = list(nodes)
+        engine_options = [self._candidate_engines(nodes[nid])
+                          for nid in node_ids]
+        for nid, opts in zip(node_ids, engine_options):
+            if not opts:
+                raise ValueError(
+                    f"no engine serves island {nodes[nid].island!r} "
+                    f"with the referenced objects")
+        plans: List[QueryExecutionPlan] = []
+        child_of_cast = {}
+        parent_of_cast = {}
+        for cid, cast in casts.items():
+            child_of_cast[cid] = next(
+                nid for nid, n in nodes.items() if n is cast.child)
+            parent_of_cast[cid] = next(
+                nid for nid, n in nodes.items() if cast in n.casts)
+        for combo in itertools.product(*engine_options):
+            node_engines = dict(zip(node_ids, combo))
+            cast_options = []
+            for cid in casts:
+                cast_options.append(self._cast_candidates(
+                    node_engines[child_of_cast[cid]],
+                    node_engines[parent_of_cast[cid]]))
+            for cast_combo in itertools.product(*cast_options):
+                plans.append(QueryExecutionPlan(
+                    root=root, node_engines=node_engines,
+                    cast_methods=dict(zip(casts, cast_combo))))
+                if len(plans) >= MAX_ENUMERATED_PLANS:
+                    return plans
+        return plans
+
+    # -- entry point (paper's Planner.processQuery) ----------------------------
+    def process_query(self, userinput: str,
+                      is_training_mode: bool = False) -> Response:
+        t0 = time.perf_counter()
+        root = bql.parse(userinput)
+        parse_s = time.perf_counter() - t0
+
+        if isinstance(root, bql.CatalogQueryNode):
+            t1 = time.perf_counter()
+            rows = self.catalog.query(root.query)
+            return Response(
+                value=rows, qep_id="catalog",
+                stages=[("Parse", parse_s),
+                        ("Catalog query", time.perf_counter() - t1)],
+                signature_key="catalog", training_mode=is_training_mode,
+                plans_considered=1)
+
+        sig = signatures.of_query(root)
+        t1 = time.perf_counter()
+        plans = self.enumerate_plans(root)
+        plan_s = time.perf_counter() - t1
+
+        if is_training_mode:
+            results = []
+            for plan in plans:
+                res = self.executor.execute_plan(plan)
+                self.monitor.add_measurement(sig, plan.qep_id, res.seconds)
+                results.append(res)
+            best = min(results, key=lambda r: r.seconds)
+            return Response(
+                value=best.value, qep_id=best.qep_id,
+                stages=[("Parse", parse_s),
+                        ("Plan enumeration", plan_s)] + best.stages,
+                signature_key=sig.key(), training_mode=True,
+                plans_considered=len(plans))
+
+        # lean mode: consult the Monitor
+        t2 = time.perf_counter()
+        best_qid = self.monitor.best_qep(sig)
+        chosen = next((p for p in plans if p.qep_id == best_qid), plans[0])
+        monitor_s = time.perf_counter() - t2
+        res = self.executor.execute_plan(chosen)
+        self.monitor.add_measurement(sig, chosen.qep_id, res.seconds)
+        return Response(
+            value=res.value, qep_id=chosen.qep_id,
+            stages=[("Parse", parse_s), ("Plan enumeration", plan_s),
+                    ("Monitor lookup", monitor_s)] + res.stages,
+            signature_key=sig.key(), training_mode=False,
+            plans_considered=len(plans))

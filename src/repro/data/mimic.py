@@ -1,0 +1,70 @@
+"""Synthetic MIMIC-II-style dataset (paper §IV): the real MIMIC II database
+is access-restricted, so we generate schema-compatible synthetic data —
+patient history into the relational engine (PostgreSQL analog), physiologic
+waveforms into the array engine (SciDB analog), free-form text into the KV
+engine (Accumulo analog) — exactly the default placement of the v0.1
+release scripts.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import datamodel as dm
+from repro.core.api import BigDawg
+
+
+def load_mimic_demo(bd: BigDawg, *, num_patients: int = 256,
+                    num_orders: int = 1024, wave_len: int = 4096,
+                    num_logs: int = 64, seed: int = 0) -> None:
+    rng = np.random.default_rng(seed)
+
+    # -- patient history -> relational engine (hoststore0) -------------------
+    subject_id = np.arange(num_patients)
+    d_patients = dm.Table({
+        "subject_id": jnp.asarray(subject_id),
+        "sex": jnp.asarray(rng.integers(0, 2, num_patients)),      # 0=F,1=M
+        "dob_year": jnp.asarray(rng.integers(1930, 2000, num_patients)),
+        "hospital_expire_flg": jnp.asarray(
+            rng.integers(0, 2, num_patients)),
+    })
+    bd.register_object("hoststore0", "mimic2v26.d_patients", d_patients,
+                       fields=tuple(d_patients.fields))
+
+    poe_order = dm.Table({
+        "poe_id": jnp.asarray(np.arange(num_orders)),
+        "subject_id": jnp.asarray(
+            rng.integers(0, num_patients, num_orders)),
+        "icustay_id": jnp.asarray(rng.integers(0, 512, num_orders)),
+        "dose": jnp.asarray(rng.uniform(0.5, 50.0, num_orders)),
+    })
+    bd.register_object("hoststore0", "mimic2v26.poe_order", poe_order,
+                       fields=tuple(poe_order.fields))
+    # replicate onto the second relational engine (paper ships mimic2_copy)
+    bd.register_object("hoststore1", "mimic2v26.poe_order", poe_order,
+                       fields=tuple(poe_order.fields))
+
+    # -- physiologic waveforms -> array engine (densehbm0) -------------------
+    t = np.arange(wave_len, dtype=np.float64)
+    signal = (np.sin(2 * np.pi * t / 360.0)[None, :]
+              * rng.uniform(0.5, 2.0, (8, 1))
+              + 0.05 * rng.standard_normal((8, wave_len)))
+    waveform = dm.ArrayObject(
+        attrs={"signal": jnp.asarray(signal)},
+        dim_names=("lead", "tick"))
+    bd.register_object("densehbm0", "mimic2v26.waveform", waveform,
+                       fields=("signal",))
+
+    myarray = dm.ArrayObject(
+        attrs={"val": jnp.asarray(rng.standard_normal(256))},
+        dim_names=("dim1",))
+    bd.register_object("densehbm0", "myarray", myarray, fields=("val",))
+
+    # -- free-form text -> KV engine (kvstore0) ------------------------------
+    keys, values = [], []
+    for i in range(num_logs):
+        keys.append((f"r_{i:04d}", "note", "text"))
+        values.append(f"synthetic clinical note {i}: pt stable, "
+                      f"hr={int(rng.integers(50, 120))}")
+    bd.register_object("kvstore0", "mimic_logs", dm.KVTable(keys, values),
+                       fields=("row", "colfam", "colqual", "value"))

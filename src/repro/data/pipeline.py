@@ -1,0 +1,86 @@
+"""Synthetic token data pipeline, served through the RelationalIsland.
+
+The polystore story (DESIGN.md §3): a training batch is a relational-island
+object — batches are materialized as Tables in a HostStore engine, cast to
+the ArrayIsland (device placement) by the Migrator, and consumed by the
+train step.  ``TokenDataset`` is deterministic in (seed, step, host) so
+multi-host loaders shard without coordination, and restart-after-failure
+resumes exactly (fault tolerance depends on this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import datamodel as dm
+from repro.models.config import ModelConfig
+from repro.models import registry
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seq_len: int = 4096
+    global_batch: int = 256
+    seed: int = 0
+    num_hosts: int = 1
+    host_id: int = 0
+
+
+class TokenDataset:
+    """Deterministic synthetic LM token stream (zipf-ish unigram draws)."""
+
+    def __init__(self, cfg: ModelConfig, dcfg: DataConfig) -> None:
+        assert dcfg.global_batch % dcfg.num_hosts == 0
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self.local_batch = dcfg.global_batch // dcfg.num_hosts
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            (self.dcfg.seed, step, self.dcfg.host_id))
+        st = registry.text_len(self.cfg, self.dcfg.seq_len)
+        # zipf-flavoured unigram distribution, clipped to vocab
+        raw = rng.zipf(1.3, size=(self.local_batch, st + 1))
+        toks = (raw % self.cfg.vocab_size).astype(np.int32)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.cfg.frontend == "vision":
+            out["prefix_embeds"] = rng.standard_normal(
+                (self.local_batch, self.cfg.num_prefix_embeds,
+                 self.cfg.d_model)).astype(np.float32)
+        if self.cfg.frontend == "audio":
+            out["frame_embeds"] = rng.standard_normal(
+                (self.local_batch, max(1, self.dcfg.seq_len
+                                       // self.cfg.src_ratio),
+                 self.cfg.d_model)).astype(np.float32)
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def batch_as_table(batch: Dict[str, np.ndarray]) -> dm.Table:
+    """Flatten a token batch into a relational-island Table object."""
+    toks = np.asarray(batch["tokens"])
+    b, s = toks.shape
+    rows = b * s
+    return dm.Table({
+        "sample": jnp.asarray(np.repeat(np.arange(b), s)),
+        "position": jnp.asarray(np.tile(np.arange(s), b)),
+        "token": jnp.asarray(toks.reshape(-1)),
+        "label": jnp.asarray(np.asarray(batch["labels"]).reshape(-1)),
+    })
+
+
+def table_as_batch(table, batch: int, seq: int) -> Dict[str, jnp.ndarray]:
+    """Accepts a Table or its array-island cast (ArrayObject)."""
+    fields = table.columns if isinstance(table, dm.Table) else table.attrs
+    return {
+        "tokens": fields["token"].reshape(batch, seq).astype(jnp.int32),
+        "labels": fields["label"].reshape(batch, seq).astype(jnp.int32),
+    }

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused blockwise int8 quantize / dequantize.
+
+This is the Migrator's "binary re-coding" cast (DenseHBM -> KVStore pages,
+int8 gradient compression).  Tiles are (ROWS, BLOCK) = (8, 128) — one VREG
+sublane x lane tile — so the absmax reduction stays in registers and the
+kernel is purely bandwidth-bound (read f32, write int8 + 1 scale per row),
+i.e. a ~4x traffic reduction over the f32 copy it replaces.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 8          # sublane tile
+BLOCK = 128       # lane tile == quant block size
+
+
+def _quant_kernel(x_ref, q_ref, scale_ref):
+    x = x_ref[...]                                   # (ROWS, BLOCK) f32
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, scale_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * scale_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_2d(x2d: jax.Array, *, interpret: bool = True):
+    """x2d: (nb, BLOCK) f32, nb % ROWS == 0 -> (q int8, scale f32 (nb,1))."""
+    nb = x2d.shape[0]
+    grid = (nb // ROWS,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS, BLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((ROWS, BLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((ROWS, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, BLOCK), jnp.int8),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.float32)],
+        interpret=interpret,
+    )(x2d)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize_2d(q: jax.Array, scale: jax.Array, *,
+                  interpret: bool = True) -> jax.Array:
+    nb = q.shape[0]
+    grid = (nb // ROWS,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS, BLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((ROWS, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROWS, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
+        interpret=interpret,
+    )(q, scale)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the blockwise int8 quantize/dequantize cast."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_blocks(x2d: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x2d: (nb, block) f32 -> (q int8 (nb, block), scale f32 (nb, 1))."""
+    absmax = jnp.max(jnp.abs(x2d), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x2d / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_blocks(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the WKV6 recurrence (per-step lax.scan)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """r,k,v,w: (B,S,H,D) fp32; u: (H,D); state: (B,H,D,D).
+
+      y_t = r_t (S_{t-1} + diag(u) k_t^T v_t);  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    xs = (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          w.swapaxes(0, 1))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.swapaxes(0, 1), state

@@ -1,0 +1,348 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax (device count is now locked) ----------
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.shapes import SHAPES, applicable          # noqa: E402
+from repro.launch import specs as S                          # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_num_devices  # noqa: E402
+from repro.models import registry                            # noqa: E402
+from repro.sharding import logical as L                      # noqa: E402
+from repro.train.step import TrainConfig, make_train_step    # noqa: E402
+from repro.optim.adamw import AdamWConfig                    # noqa: E402
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(lhs: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(lhs):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device wire-byte estimates from the partitioned HLO.
+
+    Convention (documented in EXPERIMENTS.md): for a group of size g,
+      all-gather / all-to-all: out_bytes * (g-1)/g
+      reduce-scatter:          out_bytes * (g-1)        (operand ~= g*out)
+      all-reduce:              2 * out_bytes * (g-1)/g  (RS + AG)
+      collective-permute:      out_bytes
+    Shapes in partitioned HLO are per-device shapes.
+    """
+    stats = {op: {"count": 0, "bytes": 0.0} for op in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        for op in _COLL_OPS:
+            if f" {op}(" not in line and f" {op}-start(" not in line:
+                continue
+            lhs = line.split(f" {op}")[0]
+            out_bytes = _shape_bytes(lhs)
+            g = 1
+            m = _GROUPS_RE.search(line)
+            if m:
+                g = int(m.group(2))
+            else:
+                m2 = _GROUPS_BRACE_RE.search(line)
+                if m2:
+                    g = len(m2.group(1).split(","))
+            if g <= 1 and op != "collective-permute":
+                continue
+            if op == "all-reduce":
+                wire = 2.0 * out_bytes * (g - 1) / g
+            elif op == "reduce-scatter":
+                wire = float(out_bytes) * (g - 1)
+            elif op == "collective-permute":
+                wire = float(out_bytes)
+            else:
+                wire = float(out_bytes) * (g - 1) / g
+            stats[op]["count"] += 1
+            stats[op]["bytes"] += wire
+            break
+    stats["total_bytes"] = sum(
+        v["bytes"] for k, v in stats.items() if isinstance(v, dict))
+    return stats
+
+
+def microbatches_for(cfg, shape, mesh, n_params: int) -> int:
+    per_dev = shape.global_batch // (
+        mesh.shape["data"] * mesh.shape.get("pod", 1))
+    if per_dev <= 1:
+        return 1
+    if n_params > 2e10:
+        return per_dev                    # 1 sequence per device per ubatch
+    if n_params > 2e9:
+        return max(1, per_dev // 4)
+    return 1
+
+
+def active_params(cfg, specs) -> tuple:
+    """(n_total, n_active): routed-expert params scaled by top_k/E."""
+    n_total, n_active = 0, 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, L.ParamSpec))[0]:
+        n = leaf.num_params()
+        n_total += n
+        keys = "/".join(str(getattr(p, "key", "")) for p in path)
+        is_routed = (L.EXPERT in leaf.axes and "router" not in keys)
+        if is_routed and cfg.num_experts:
+            n_active += n * cfg.top_k / cfg.num_experts
+        else:
+            n_active += n
+    return n_total, int(n_active)
+
+
+def seq_scan_correction(cfg, tokens: int, devices: int, kind: str) -> float:
+    """Analytic per-device FLOPs for the in-time-scan SSM cores, which XLA's
+    cost model counts once (loop bodies).  ~0.1% of total; decode cells run
+    the scan with length 1 so no correction applies.  Documented in
+    EXPERIMENTS.md §Dry-run."""
+    if kind == "decode" or cfg.ssm_kind == "":
+        return 0.0
+    plan = cfg.layer_plan()
+    n_blocks = cfg.num_scanned()
+    fl = 0.0
+    for mixer, _ in plan * n_blocks:
+        if mixer == "rwkv6":
+            fl += tokens * 7.0 * cfg.d_model * cfg.rwkv_head_dim
+        elif mixer == "mamba":
+            di = cfg.ssm_expand * cfg.d_model
+            fl += tokens * 8.0 * di * cfg.ssm_state
+    if kind == "train":
+        fl *= 3.0        # bwd ~= 2x fwd
+    return fl / devices
+
+
+def build_lowered(arch: str, shape_name: str, mesh, *,
+                  seq_parallel=None, shard_kv_seq=None, microbatches=None,
+                  remat=None, capacity_factor=None, donate: bool = True,
+                  scan_layers: bool = True, vocab_pad_to=None,
+                  kv_cache_dtype=None, shard_ctx_train=None,
+                  moe_cap_shard=None):
+    cfg = registry.get_config(arch)
+    overrides = {}
+    if remat is not None:
+        overrides["remat"] = remat
+    if capacity_factor is not None:
+        overrides["capacity_factor"] = capacity_factor
+    if not scan_layers:
+        overrides["scan_layers"] = False
+    if vocab_pad_to is not None:
+        overrides["vocab_pad_to"] = vocab_pad_to
+    if kv_cache_dtype is not None:
+        overrides["kv_cache_dtype"] = kv_cache_dtype
+    if shard_ctx_train is not None:
+        overrides["shard_ctx_train"] = shard_ctx_train
+    if moe_cap_shard is not None:
+        overrides["moe_cap_shard"] = moe_cap_shard
+    if overrides:
+        cfg = registry.get_config(arch, **overrides)
+    shape = SHAPES[shape_name]
+    rules = S.pick_rules(cfg, mesh, seq_parallel=seq_parallel,
+                         shard_kv_seq=shard_kv_seq)
+    specs = registry.param_specs(cfg)
+    n_total, n_active = active_params(cfg, specs)
+
+    if shape.kind == "train":
+        mb = microbatches if microbatches is not None \
+            else microbatches_for(cfg, shape, mesh, n_total)
+        tcfg = TrainConfig(optimizer=AdamWConfig(), microbatches=mb)
+        step = make_train_step(cfg, tcfg, rules)
+        state_structs, state_shards = S.train_state_specs(cfg, mesh, rules)
+        batch_structs, batch_shards = S.batch_specs(cfg, shape, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_shards, batch_shards),
+            out_shardings=(state_shards, None),
+            donate_argnums=(0,) if donate else ())
+        lowered = jitted.lower(state_structs, batch_structs)
+        extra = {"microbatches": mb}
+    elif shape.kind == "prefill":
+        _, p_structs, p_shards = S.param_structs_and_shardings(
+            cfg, mesh, rules, dtype=jnp.bfloat16)
+        batch_structs, batch_shards = S.batch_specs(cfg, shape, mesh)
+        batch_structs.pop("labels"), batch_shards.pop("labels")
+        c_structs, c_shards = S.cache_structs_and_shardings(
+            cfg, shape, mesh, rules)
+
+        def prefill_step(params, batch, cache):
+            logits, new_cache, extras = registry.prefill(
+                params, batch, cache, cfg, rules)
+            return logits, new_cache
+
+        jitted = jax.jit(
+            prefill_step,
+            in_shardings=(p_shards, batch_shards, c_shards),
+            out_shardings=(None, c_shards),
+            donate_argnums=(2,) if donate else ())
+        lowered = jitted.lower(p_structs, batch_structs, c_structs)
+        extra = {}
+    else:  # decode
+        _, p_structs, p_shards = S.param_structs_and_shardings(
+            cfg, mesh, rules, dtype=jnp.bfloat16)
+        batch_structs, batch_shards = S.decode_batch_specs(cfg, shape, mesh)
+        c_structs, c_shards = S.cache_structs_and_shardings(
+            cfg, shape, mesh, rules)
+
+        def serve_step(params, batch, cache, pos):
+            logits, new_cache = registry.decode_step(
+                params, batch, cache, pos, cfg, rules)
+            return logits, new_cache
+
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(p_shards, batch_shards, c_shards, None),
+            out_shardings=(None, c_shards),
+            donate_argnums=(2,) if donate else ())
+        lowered = jitted.lower(p_structs, batch_structs, c_structs,
+                               jax.ShapeDtypeStruct((), jnp.int32))
+        extra = {}
+    return lowered, {"n_params": n_total, "n_active": n_active, **extra}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             cost_probe: bool = True, **kw) -> dict:
+    """Two lowerings per cell:
+      1. compile-proof: scanned layers + memory-fitting microbatches ->
+         memory_analysis + "it compiles on this mesh".
+      2. cost probe: UNROLLED layers, microbatches=1 -> exact per-device
+         flops / bytes / collective schedule (XLA cost analysis counts
+         while bodies once, so scans must be unrolled to be counted;
+         verified in EXPERIMENTS.md §Dry-run methodology).
+    The multi-pod pass runs only the compile-proof (sharding coherence)."""
+    cfg = registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    cell = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "kind": shape.kind}
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        return {**cell, "status": "skipped", "reason": reason}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        lowered, meta = build_lowered(arch, shape_name, mesh, **kw)
+        compiled = lowered.compile()
+    except Exception as exc:                               # noqa: BLE001
+        return {**cell, "status": "error",
+                "error": f"{type(exc).__name__}: {exc}"[:500]}
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind != "decode" else shape.global_batch)
+    out = {
+        **cell, "status": "ok", "compile_seconds": round(compile_s, 1),
+        "devices": mesh_num_devices(mesh),
+        "tokens": tokens,
+        **meta,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+    }
+
+    if cost_probe:
+        t1 = time.time()
+        try:
+            probe_kw = dict(kw)
+            probe_kw["microbatches"] = 1
+            probe_kw["scan_layers"] = False
+            lowered_p, _ = build_lowered(arch, shape_name, mesh, **probe_kw)
+            compiled_p = lowered_p.compile()
+            cost = compiled_p.cost_analysis() or {}
+            colls = collective_stats(compiled_p.as_text())
+            corr = seq_scan_correction(cfg, tokens,
+                                       mesh_num_devices(mesh), shape.kind)
+            out.update({
+                "probe_compile_seconds": round(time.time() - t1, 1),
+                "flops_per_device": cost.get("flops", 0.0) + corr,
+                "seq_scan_flops_correction": corr,
+                "bytes_per_device": cost.get("bytes accessed", 0.0),
+                "collectives": colls,
+            })
+        except Exception as exc:                           # noqa: BLE001
+            out["probe_error"] = f"{type(exc).__name__}: {exc}"[:300]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", required=True, choices=registry.ARCH_NAMES)
+    ap.add_argument("--shape", required=True, choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--seq-parallel", type=int, default=None)
+    ap.add_argument("--shard-kv-seq", type=int, default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", type=str, default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--no-cost-probe", action="store_true")
+    ap.add_argument("--vocab-pad", type=int, default=None)
+    ap.add_argument("--kv-cache-dtype", type=str, default=None,
+                    choices=("bf16", "int8"))
+    ap.add_argument("--shard-ctx-train", type=int, default=None)
+    ap.add_argument("--moe-cap-shard", type=int, default=None)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+
+    kw = {}
+    if args.seq_parallel is not None:
+        kw["seq_parallel"] = bool(args.seq_parallel)
+    if args.shard_kv_seq is not None:
+        kw["shard_kv_seq"] = bool(args.shard_kv_seq)
+    if args.microbatches is not None:
+        kw["microbatches"] = args.microbatches
+    if args.remat is not None:
+        kw["remat"] = args.remat
+    if args.capacity_factor is not None:
+        kw["capacity_factor"] = args.capacity_factor
+    if args.no_donate:
+        kw["donate"] = False
+    if args.vocab_pad is not None:
+        kw["vocab_pad_to"] = args.vocab_pad
+    if args.kv_cache_dtype is not None:
+        kw["kv_cache_dtype"] = args.kv_cache_dtype
+    if args.shard_ctx_train is not None:
+        kw["shard_ctx_train"] = bool(args.shard_ctx_train)
+    if args.moe_cap_shard is not None:
+        kw["moe_cap_shard"] = bool(args.moe_cap_shard)
+
+    result = run_cell(args.arch, args.shape, args.multi_pod,
+                      cost_probe=not args.no_cost_probe, **kw)
+    line = json.dumps(result)
+    print(line)
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(line + "\n")
+    if result["status"] == "error":
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

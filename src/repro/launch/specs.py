@@ -1,0 +1,125 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input of every
+(arch x shape) cell — weak-type-correct, shardable, no device allocation —
+plus the matching NamedSharding trees (deliverable (e) step 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeConfig
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.sharding import logical as L
+
+
+def pick_rules(cfg: ModelConfig, mesh: Mesh, *,
+               seq_parallel: Optional[bool] = None,
+               shard_kv_seq: Optional[bool] = None) -> L.AxisRules:
+    """Arch-aware rule selection: KV-cache sharding axis is heads when they
+    divide the model axis, else cache-sequence; SP on for big d_model."""
+    model_size = mesh.shape["model"]
+    if shard_kv_seq is None:
+        shard_kv_seq = (cfg.num_kv_heads == 0
+                        or cfg.num_kv_heads % model_size != 0)
+    if seq_parallel is None:
+        seq_parallel = cfg.d_model * cfg.num_layers >= 4096 * 28
+    return L.default_rules(mesh, shard_kv_seq=shard_kv_seq,
+                           seq_parallel=seq_parallel)
+
+
+def _batch_axes(mesh: Mesh, batch_dim: Optional[int] = None):
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if batch_dim is not None:
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if batch_dim % size != 0:
+            # long_500k-style tiny batches: fall back to replication
+            return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(structs, shardings) for a training batch dict."""
+    b = shape.global_batch
+    st = registry.text_len(cfg, shape.seq_len)
+    ba = _batch_axes(mesh, b)
+    structs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((b, st), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, st), jnp.int32),
+    }
+    shards: Dict[str, Any] = {
+        "tokens": NamedSharding(mesh, P(ba, None)),
+        "labels": NamedSharding(mesh, P(ba, None)),
+    }
+    if cfg.frontend == "vision":
+        structs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_prefix_embeds, cfg.d_model), jnp.float32)
+        shards["prefix_embeds"] = NamedSharding(mesh, P(ba, None, None))
+    if cfg.frontend == "audio":
+        structs["frame_embeds"] = jax.ShapeDtypeStruct(
+            (b, max(1, shape.seq_len // cfg.src_ratio), cfg.d_model),
+            jnp.float32)
+        shards["frame_embeds"] = NamedSharding(mesh, P(ba, None, None))
+    return structs, shards
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                       ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    b = shape.global_batch
+    ba = _batch_axes(mesh, b)
+    structs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    shards: Dict[str, Any] = {
+        "tokens": NamedSharding(mesh, P(ba, None))}
+    if registry.is_encdec(cfg):
+        src = max(1, shape.seq_len // cfg.src_ratio)
+        structs["memory"] = jax.ShapeDtypeStruct(
+            (b, src, cfg.d_model), jnp.bfloat16)
+        shards["memory"] = NamedSharding(mesh, P(ba, None, None))
+    return structs, shards
+
+
+def param_structs_and_shardings(cfg: ModelConfig, mesh: Mesh,
+                                rules: L.AxisRules, *,
+                                dtype=None):
+    specs = registry.param_specs(cfg)
+    if dtype is not None:
+        specs = jax.tree.map(
+            lambda s: dataclasses.replace(s, dtype=dtype), specs,
+            is_leaf=lambda x: isinstance(x, L.ParamSpec))
+    structs = L.spec_tree_structs(specs)
+    shardings = L.spec_tree_shardings(specs, mesh, rules)
+    return specs, structs, shardings
+
+
+def train_state_specs(cfg: ModelConfig, mesh: Mesh, rules: L.AxisRules):
+    """(structs, shardings) for {"params", "opt"} train state."""
+    specs, p_structs, p_shards = param_structs_and_shardings(
+        cfg, mesh, rules)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    m_structs = jax.tree.map(f32, p_structs)
+    structs = {
+        "params": p_structs,
+        "opt": {"m": m_structs, "v": m_structs,
+                "step": jax.ShapeDtypeStruct((), jnp.int32)},
+    }
+    shardings = {
+        "params": p_shards,
+        "opt": {"m": p_shards, "v": p_shards,
+                "step": NamedSharding(mesh, P())},
+    }
+    return structs, shardings
+
+
+def cache_structs_and_shardings(cfg: ModelConfig, shape: ShapeConfig,
+                                mesh: Mesh, rules: L.AxisRules):
+    specs = registry.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    return (L.spec_tree_structs(specs),
+            L.spec_tree_shardings(specs, mesh, rules))

@@ -1,0 +1,201 @@
+"""Encoder-decoder transformer (seamless-m4t family, arXiv:2308.11596).
+
+The speech frontend is a STUB per the brief: ``input_specs()`` supplies
+precomputed frame embeddings (B, S_src, D); this module implements the
+transformer backbone (encoder, causal decoder with cross-attention).
+Positions are learned absolute embeddings (NLLB-style), no rope.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers
+from repro.models.config import ModelConfig
+from repro.sharding import logical as L
+from repro.sharding.logical import ParamSpec
+
+MAX_POSITIONS = 32768
+
+
+def _enc_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": layers.norm_specs(cfg.d_model, cfg.norm_kind),
+        "attn": attention.attn_specs(cfg),
+        "ln2": layers.norm_specs(cfg.d_model, cfg.norm_kind),
+        "ffn": layers.ffn_specs(cfg.d_model, cfg.d_ff, cfg.mlp_kind),
+    }
+
+
+def _dec_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": layers.norm_specs(cfg.d_model, cfg.norm_kind),
+        "self_attn": attention.attn_specs(cfg),
+        "ln_x": layers.norm_specs(cfg.d_model, cfg.norm_kind),
+        "cross_attn": attention.attn_specs(cfg, cross=True),
+        "ln2": layers.norm_specs(cfg.d_model, cfg.norm_kind),
+        "ffn": layers.ffn_specs(cfg.d_model, cfg.d_ff, cfg.mlp_kind),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": layers.embed_specs(cfg.padded_vocab, cfg.d_model,
+                                    cfg.tie_embeddings),
+        "pos_embed": ParamSpec((MAX_POSITIONS, cfg.d_model),
+                               (None, L.EMBED), init="embed_normal"),
+        "enc_blocks": layers.stack_specs(_enc_block_specs(cfg),
+                                         cfg.encoder_layers),
+        "enc_norm": layers.norm_specs(cfg.d_model, cfg.norm_kind),
+        "dec_blocks": layers.stack_specs(_dec_block_specs(cfg),
+                                         cfg.num_layers),
+        "final_norm": layers.norm_specs(cfg.d_model, cfg.norm_kind),
+    }
+
+
+def _add_positions(params, x: jax.Array, offset) -> jax.Array:
+    s = x.shape[1]
+    pos = jax.lax.dynamic_slice_in_dim(
+        params["pos_embed"], jnp.asarray(offset, jnp.int32), s, axis=0)
+    return x + pos[None].astype(x.dtype)
+
+
+def encode(params, frame_embeds: jax.Array, cfg: ModelConfig, rules=None
+           ) -> jax.Array:
+    """frame_embeds: (B, S_src, D) stub frontend output -> encoder memory."""
+    x = frame_embeds.astype(jnp.bfloat16)
+    x = _add_positions(params, x, 0)
+    x = L.constrain(x, rules, (L.BATCH, L.SEQ, L.ACT_EMBED))
+
+    def body(xc, block):
+        h = layers.apply_norm(block["ln1"], xc, cfg.norm_kind, cfg.norm_eps)
+        xc = xc + attention.self_attention(block["attn"], h, cfg, rules,
+                                           causal=False)
+        h = layers.apply_norm(block["ln2"], xc, cfg.norm_kind, cfg.norm_eps)
+        xc = xc + layers.apply_ffn(block["ffn"], h, cfg.mlp_kind, rules)
+        xc = L.constrain(xc, rules, (L.BATCH, L.RESID, L.ACT_EMBED))
+        return xc, None
+
+    if cfg.remat in ("block", "full"):
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    else:
+        for i in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda p: p[i],
+                                        params["enc_blocks"]))
+    return layers.apply_norm(params["enc_norm"], x, cfg.norm_kind,
+                             cfg.norm_eps)
+
+
+def _dec_block(block, x, memory, cfg, rules, *, cache=None, pos=None,
+               mode="train"):
+    h = layers.apply_norm(block["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+    if mode == "train":
+        x = x + attention.self_attention(block["self_attn"], h, cfg, rules)
+        new_kv = None
+    elif mode == "prefill":
+        x = x + attention.self_attention(block["self_attn"], h, cfg, rules)
+        s = h.shape[1]
+        positions = jnp.arange(s)[None, :]
+        _, k, v = attention.project_qkv(block["self_attn"], h, cfg, rules,
+                                        positions)
+        new_kv = attention.write_kv(cache, k, v, 0, cfg)
+    else:
+        out, new_kv = attention.decode_attention(block["self_attn"], h,
+                                                 cache, pos, cfg, rules)
+        x = x + out
+
+    h = layers.apply_norm(block["ln_x"], x, cfg.norm_kind, cfg.norm_eps)
+    x = x + attention.cross_attention(block["cross_attn"], h, memory, cfg,
+                                      rules)
+    h = layers.apply_norm(block["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+    x = x + layers.apply_ffn(block["ffn"], h, cfg.mlp_kind, rules)
+    return x, new_kv
+
+
+def _run_decoder(params, x, memory, cfg, rules, *, cache=None, pos=None,
+                 mode="train"):
+    def body(xc, scanned):
+        if cache is not None:
+            block, kv = scanned
+        else:
+            block, kv = scanned, None
+        xc, new_kv = _dec_block(block, xc, memory, cfg, rules, cache=kv,
+                                pos=pos, mode=mode)
+        if mode == "train":
+            xc = L.constrain(xc, rules, (L.BATCH, L.RESID, L.ACT_EMBED))
+        return xc, new_kv
+
+    if cfg.remat in ("block", "full"):
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        xs = (params["dec_blocks"], cache) if cache is not None \
+            else params["dec_blocks"]
+        x, new_cache = jax.lax.scan(body, x, xs)
+        return x, new_cache
+    collected = []
+    for i in range(cfg.num_layers):
+        block = jax.tree.map(lambda p: p[i], params["dec_blocks"])
+        if cache is not None:
+            kv = jax.tree.map(lambda c: c[i], cache)
+            x, new_kv = body(x, (block, kv))
+            collected.append(new_kv)
+        else:
+            x, _ = body(x, block)
+    new_cache = (jax.tree.map(lambda *xs: jnp.stack(xs), *collected)
+                 if cache is not None else None)
+    return x, new_cache
+
+
+def forward(params, tokens, frame_embeds, cfg: ModelConfig, rules=None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Training: (tokens (B,S_tgt), frames (B,S_src,D)) -> (logits, aux=0)."""
+    memory = encode(params, frame_embeds, cfg, rules)
+    x = layers.embed_tokens(params["embed"], tokens, rules)
+    x = _add_positions(params, x, 0)
+    x, _ = _run_decoder(params, x, memory, cfg, rules, mode="train")
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_kind,
+                          cfg.norm_eps)
+    logits = layers.logits_out(params["embed"], x, rules)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    kv = attention.kv_cache_specs(cfg, batch, cache_len)
+    return layers.stack_specs(kv, cfg.num_layers)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, cache_len),
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def prefill(params, tokens, frame_embeds, cache, cfg: ModelConfig,
+            rules=None):
+    memory = encode(params, frame_embeds, cfg, rules)
+    x = layers.embed_tokens(params["embed"], tokens, rules)
+    x = _add_positions(params, x, 0)
+    x, new_cache = _run_decoder(params, x, memory, cfg, rules, cache=cache,
+                                mode="prefill")
+    x = layers.apply_norm(params["final_norm"], x[:, -1:], cfg.norm_kind,
+                          cfg.norm_eps)
+    return layers.logits_out(params["embed"], x, rules), new_cache, memory
+
+
+def decode_step(params, tokens, memory, cache, pos, cfg: ModelConfig,
+                rules=None):
+    """tokens (B,1); memory (B,S_src,D) fixed encoder output."""
+    x = layers.embed_tokens(params["embed"], tokens, rules)
+    s_idx = jnp.asarray(pos, jnp.int32)
+    pos_vec = jax.lax.dynamic_slice_in_dim(params["pos_embed"], s_idx, 1,
+                                           axis=0)
+    x = x + pos_vec[None].astype(x.dtype)
+    x, new_cache = _run_decoder(params, x, memory, cfg, rules, cache=cache,
+                                pos=pos, mode="decode")
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_kind,
+                          cfg.norm_eps)
+    return layers.logits_out(params["embed"], x, rules), new_cache

@@ -1,0 +1,148 @@
+"""Shared building blocks for the model zoo: norms, embeddings, rotary,
+feed-forward variants.  Pure-functional JAX; params are pytrees described by
+``ParamSpec`` (sharding/logical.py) so every tensor carries logical axes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import logical as L
+from repro.sharding.logical import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+def norm_specs(d_model: int, kind: str) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": ParamSpec((d_model,), (L.EMBED,), init="ones")}
+    if kind == "layernorm":
+        return {"scale": ParamSpec((d_model,), (L.EMBED,), init="ones"),
+                "bias": ParamSpec((d_model,), (L.EMBED,), init="zeros")}
+    raise ValueError(kind)
+
+
+def apply_norm(params: dict, x: jax.Array, kind: str,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        x = x * jax.lax.rsqrt(var + eps)
+        out = x * params["scale"].astype(jnp.float32)
+    elif kind == "layernorm":
+        mean = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        x = (x - mean) * jax.lax.rsqrt(var + eps)
+        out = x * params["scale"].astype(jnp.float32) + params["bias"].astype(
+            jnp.float32)
+    else:
+        raise ValueError(kind)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed_specs(vocab: int, d_model: int, tie: bool) -> dict:
+    specs = {"embedding": ParamSpec((vocab, d_model), (L.VOCAB, L.EMBED),
+                                    init="embed_normal")}
+    if not tie:
+        specs["unembed"] = ParamSpec((d_model, vocab), (L.EMBED, L.VOCAB),
+                                     init="normal")
+    return specs
+
+
+def embed_tokens(params: dict, tokens: jax.Array, rules,
+                 compute_dtype=jnp.bfloat16) -> jax.Array:
+    table = params["embedding"].astype(compute_dtype)
+    x = jnp.take(table, tokens, axis=0)
+    return L.constrain(x, rules, (L.BATCH, L.SEQ, L.ACT_EMBED))
+
+
+def logits_out(params: dict, x: jax.Array, rules,
+               softcap: float = 0.0) -> jax.Array:
+    if "unembed" in params:
+        w = params["unembed"].astype(x.dtype)
+        logits = jnp.einsum("bsd,dv->bsv", x, w)
+    else:
+        w = params["embedding"].astype(x.dtype)
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    logits = logits.astype(jnp.float32)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return L.constrain(logits, rules, (L.BATCH, L.SEQ, L.VOCAB))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)          # (head_dim//2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)          # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense feed-forward variants
+# ---------------------------------------------------------------------------
+def ffn_specs(d_model: int, d_ff: int, kind: str) -> dict:
+    if kind == "swiglu":
+        return {
+            "wi_gate": ParamSpec((d_model, d_ff), (L.EMBED, L.MLP)),
+            "wi_up": ParamSpec((d_model, d_ff), (L.EMBED, L.MLP)),
+            "wo": ParamSpec((d_ff, d_model), (L.MLP, L.EMBED)),
+        }
+    if kind == "gelu":
+        return {
+            "wi": ParamSpec((d_model, d_ff), (L.EMBED, L.MLP)),
+            "bi": ParamSpec((d_ff,), (L.MLP,), init="zeros"),
+            "wo": ParamSpec((d_ff, d_model), (L.MLP, L.EMBED)),
+            "bo": ParamSpec((d_model,), (L.EMBED,), init="zeros"),
+        }
+    raise ValueError(kind)
+
+
+def apply_ffn(params: dict, x: jax.Array, kind: str, rules) -> jax.Array:
+    dt = x.dtype
+    if kind == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, params["wi_gate"].astype(dt))
+        up = jnp.einsum("bsd,df->bsf", x, params["wi_up"].astype(dt))
+        h = jax.nn.silu(gate) * up
+        h = L.constrain(h, rules, (L.BATCH, L.SEQ, L.MLP))
+        out = jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(dt))
+    elif kind == "gelu":
+        h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(dt))
+        h = jax.nn.gelu(h + params["bi"].astype(dt))
+        h = L.constrain(h, rules, (L.BATCH, L.SEQ, L.MLP))
+        out = jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(dt)) \
+            + params["bo"].astype(dt)
+    else:
+        raise ValueError(kind)
+    return L.constrain(out, rules, (L.BATCH, L.SEQ, L.ACT_EMBED))
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities for scanned (stacked) layers
+# ---------------------------------------------------------------------------
+def stack_specs(spec_tree, n: int):
+    """Prepend a LAYER axis of size n to every ParamSpec in a tree."""
+    def _stack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, (L.LAYER,) + s.axes, dtype=s.dtype,
+                         init=s.init, init_scale=s.init_scale)
+    return jax.tree.map(_stack, spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))

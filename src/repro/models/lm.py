@@ -1,0 +1,337 @@
+"""Unified decoder-only language model covering the dense / moe / ssm /
+hybrid / vlm families of the assigned pool.
+
+Layers are scanned (lax.scan over stacked params) with a configurable period:
+dense archs scan single blocks, Jamba scans period-8 super-blocks (7 mamba +
+1 attention, MoE on odd sub-layers).  HLO size is therefore depth-independent,
+which is what makes the 104B dry-run compile on a CPU host (DESIGN.md §5).
+
+Three entry points:
+  forward(...)       — full-sequence training forward -> (logits, aux)
+  prefill(...)       — full-sequence forward that also fills caches/states
+  decode_step(...)   — one-token step against caches/states (serve path)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, mamba, moe, rwkv6
+from repro.models.config import ModelConfig
+from repro.sharding import logical as L
+from repro.sharding.logical import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+def _mixer_specs(cfg: ModelConfig, kind: str) -> dict:
+    if kind == "attn":
+        return attention.attn_specs(cfg)
+    if kind == "rwkv6":
+        return rwkv6.time_mix_specs(cfg)
+    if kind == "mamba":
+        return mamba.mamba_specs(cfg)
+    raise ValueError(kind)
+
+
+def _ffn_specs(cfg: ModelConfig, kind: str, *, dense_ff: int = 0) -> dict:
+    if kind == "dense":
+        return layers.ffn_specs(cfg.d_model, dense_ff or cfg.d_ff,
+                                cfg.mlp_kind)
+    if kind == "moe":
+        return moe.moe_specs(cfg)
+    if kind == "rwkv_cm":
+        return rwkv6.channel_mix_specs(cfg)
+    raise ValueError(kind)
+
+
+def _block_specs(cfg: ModelConfig, plan) -> dict:
+    specs: Dict[str, Any] = {}
+    for i, (mixer_kind, ffn_kind) in enumerate(plan):
+        sub = {
+            "mixer": _mixer_specs(cfg, mixer_kind),
+            "ffn": _ffn_specs(cfg, ffn_kind),
+            "ln1": layers.norm_specs(cfg.d_model, cfg.norm_kind),
+        }
+        if not cfg.parallel_block:
+            sub["ln2"] = layers.norm_specs(cfg.d_model, cfg.norm_kind)
+        specs[f"sub{i}"] = sub
+    return specs
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    plan = cfg.layer_plan()
+    specs: Dict[str, Any] = {
+        "embed": layers.embed_specs(cfg.padded_vocab, cfg.d_model,
+                                    cfg.tie_embeddings),
+        "final_norm": layers.norm_specs(cfg.d_model, cfg.norm_kind),
+    }
+    # prologue: leading dense layers outside the scan (deepseek-moe)
+    for j in range(cfg.first_k_dense):
+        sub = {
+            "mixer": _mixer_specs(cfg, "attn"),
+            "ffn": _ffn_specs(cfg, "dense", dense_ff=cfg.dense_d_ff),
+            "ln1": layers.norm_specs(cfg.d_model, cfg.norm_kind),
+        }
+        if not cfg.parallel_block:
+            sub["ln2"] = layers.norm_specs(cfg.d_model, cfg.norm_kind)
+        specs[f"prologue{j}"] = sub
+    specs["blocks"] = layers.stack_specs(_block_specs(cfg, plan),
+                                         cfg.num_scanned())
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (serve path) — registered as KVStore objects by the catalog
+# ---------------------------------------------------------------------------
+def _sub_cache_specs(cfg: ModelConfig, mixer_kind: str, ffn_kind: str,
+                     batch: int, cache_len: int) -> dict:
+    out: Dict[str, Any] = {}
+    if mixer_kind == "attn":
+        out["kv"] = attention.kv_cache_specs(cfg, batch, cache_len)
+    elif mixer_kind == "rwkv6":
+        out["time"] = rwkv6.init_time_state(cfg, batch)
+    elif mixer_kind == "mamba":
+        out["ssm"] = mamba.init_mamba_state(cfg, batch)
+    if ffn_kind == "rwkv_cm":
+        out["channel"] = rwkv6.init_channel_state(cfg, batch)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    plan = cfg.layer_plan()
+    specs: Dict[str, Any] = {}
+    for j in range(cfg.first_k_dense):
+        specs[f"prologue{j}"] = _sub_cache_specs(cfg, "attn", "dense",
+                                                 batch, cache_len)
+    block = {f"sub{i}": _sub_cache_specs(cfg, mk, fk, batch, cache_len)
+             for i, (mk, fk) in enumerate(plan)}
+    specs["blocks"] = layers.stack_specs(block, cfg.num_scanned())
+    return specs
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_specs(cfg, batch,
+                                                           cache_len),
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer application
+# ---------------------------------------------------------------------------
+def _apply_mixer(params, x, kind, cfg, rules, *, cache=None, pos=None,
+                 mode="train"):
+    """Returns (out, new_cache). cache is the mixer's state dict or None."""
+    if kind == "attn":
+        if mode == "train":
+            return attention.self_attention(params, x, cfg, rules), None
+        if mode == "prefill":
+            s = x.shape[1]
+            out = attention.self_attention(params, x, cfg, rules)
+            # fill the cache with this sequence's k/v (codec-aware)
+            positions = jnp.arange(s)[None, :]
+            _, k, v = attention.project_qkv(params, x, cfg, rules, positions)
+            return out, {"kv": attention.write_kv(cache["kv"], k, v, 0,
+                                                  cfg)}
+        # decode
+        out, kv = attention.decode_attention(params, x, cache["kv"], pos,
+                                             cfg, rules)
+        return out, {"kv": kv}
+    if kind == "rwkv6":
+        state = cache["time"] if cache is not None else None
+        if mode == "train":
+            out, _ = rwkv6.apply_time_mix(params, x, cfg, rules, None)
+            return out, None
+        out, new = rwkv6.apply_time_mix(params, x, cfg, rules, state)
+        return out, {"time": new}
+    if kind == "mamba":
+        state = cache["ssm"] if cache is not None else None
+        if mode == "train":
+            out, _ = mamba.apply_mamba(params, x, cfg, rules, None)
+            return out, None
+        out, new = mamba.apply_mamba(params, x, cfg, rules, state)
+        return out, {"ssm": new}
+    raise ValueError(kind)
+
+
+def _apply_ffn(params, x, kind, cfg, rules, *, cache=None, mode="train"):
+    if kind == "dense":
+        return layers.apply_ffn(params, x, cfg.mlp_kind, rules), None, 0.0
+    if kind == "moe":
+        out, aux = moe.apply_moe(params, x, cfg, rules)
+        return out, None, aux
+    if kind == "rwkv_cm":
+        state = cache["channel"] if cache is not None else None
+        if mode == "train":
+            out, _ = rwkv6.apply_channel_mix(params, x, cfg, rules, None)
+            return out, None, 0.0
+        out, new = rwkv6.apply_channel_mix(params, x, cfg, rules, state)
+        return out, {"channel": new}, 0.0
+    raise ValueError(kind)
+
+
+def _apply_sub(sub_params, x, mixer_kind, ffn_kind, cfg, rules, *,
+               cache=None, pos=None, mode="train"):
+    """One (mixer + ffn) sub-layer with residuals. Returns (x, cache, aux)."""
+    mixer_cache = cache if cache is not None else None
+    if cfg.parallel_block:
+        h = layers.apply_norm(sub_params["ln1"], x, cfg.norm_kind,
+                              cfg.norm_eps)
+        attn_out, new_mixer = _apply_mixer(
+            sub_params["mixer"], h, mixer_kind, cfg, rules,
+            cache=mixer_cache, pos=pos, mode=mode)
+        ffn_out, new_ffn, aux = _apply_ffn(
+            sub_params["ffn"], h, ffn_kind, cfg, rules, cache=mixer_cache,
+            mode=mode)
+        x = x + attn_out + ffn_out
+    else:
+        h = layers.apply_norm(sub_params["ln1"], x, cfg.norm_kind,
+                              cfg.norm_eps)
+        attn_out, new_mixer = _apply_mixer(
+            sub_params["mixer"], h, mixer_kind, cfg, rules,
+            cache=mixer_cache, pos=pos, mode=mode)
+        x = x + attn_out
+        h = layers.apply_norm(sub_params["ln2"], x, cfg.norm_kind,
+                              cfg.norm_eps)
+        ffn_out, new_ffn, aux = _apply_ffn(
+            sub_params["ffn"], h, ffn_kind, cfg, rules, cache=mixer_cache,
+            mode=mode)
+        x = x + ffn_out
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        for upd in (new_mixer, new_ffn):
+            if upd:
+                new_cache.update(upd)
+    return x, new_cache, aux
+
+
+def _apply_block(block_params, x, plan, cfg, rules, *, cache=None, pos=None,
+                 mode="train"):
+    """One scan period (all sub-layers). Returns (x, new_cache, aux_sum)."""
+    aux_sum = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    for i, (mixer_kind, ffn_kind) in enumerate(plan):
+        sub_cache = cache[f"sub{i}"] if cache is not None else None
+        x, sc, aux = _apply_sub(
+            block_params[f"sub{i}"], x, mixer_kind, ffn_kind, cfg, rules,
+            cache=sub_cache, pos=pos, mode=mode)
+        # sequence-parallel residual: saved scan carries are seq-sharded
+        if mode == "train":
+            x = L.constrain(x, rules, (L.BATCH, L.RESID, L.ACT_EMBED))
+        aux_sum = aux_sum + jnp.asarray(aux, jnp.float32)
+        if cache is not None:
+            new_cache[f"sub{i}"] = sc
+    return x, (new_cache if cache is not None else None), aux_sum
+
+
+# ---------------------------------------------------------------------------
+# Full model passes
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, tokens, cfg, rules, prefix_embeds=None,
+                  compute_dtype=jnp.bfloat16):
+    x = layers.embed_tokens(params["embed"], tokens, rules,
+                            compute_dtype=compute_dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(compute_dtype), x], axis=1)
+        x = L.constrain(x, rules, (L.BATCH, L.SEQ, L.ACT_EMBED))
+    return x
+
+
+def _run_stack(params, x, cfg, rules, *, cache=None, pos=None, mode="train"):
+    """Prologue layers then the scanned stack. Returns (x, cache, aux)."""
+    plan = cfg.layer_plan()
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {} if cache is not None else None
+
+    for j in range(cfg.first_k_dense):
+        sub_cache = cache[f"prologue{j}"] if cache is not None else None
+        x, sc, aux = _apply_sub(params[f"prologue{j}"], x, "attn", "dense",
+                                cfg, rules, cache=sub_cache, pos=pos,
+                                mode=mode)
+        aux_total = aux_total + aux
+        if cache is not None:
+            new_cache[f"prologue{j}"] = sc
+
+    def body(carry, scanned):
+        xc, aux_acc = carry
+        if cache is not None:
+            block_p, block_c = scanned
+        else:
+            block_p, block_c = scanned, None
+        xc, bc, aux = _apply_block(block_p, xc, plan, cfg, rules,
+                                   cache=block_c, pos=pos, mode=mode)
+        return (xc, aux_acc + aux), bc
+
+    if cfg.remat in ("block", "full"):
+        body = jax.checkpoint(body)
+
+    if cfg.scan_layers:
+        xs = (params["blocks"], cache["blocks"]) if cache is not None \
+            else params["blocks"]
+        (x, aux_total2), block_caches = jax.lax.scan(body, (x, aux_total),
+                                                     xs)
+        if cache is not None:
+            new_cache["blocks"] = block_caches
+        return x, new_cache, aux_total2
+
+    # unrolled path: exact cost_analysis (XLA counts while bodies once, so
+    # the dry-run cost probe lowers with scan_layers=False; DESIGN.md §7)
+    n = cfg.num_scanned()
+    carry = (x, aux_total)
+    collected = []
+    for i in range(n):
+        block_p = jax.tree.map(lambda p: p[i], params["blocks"])
+        if cache is not None:
+            block_c = jax.tree.map(lambda c: c[i], cache["blocks"])
+            carry, bc = body(carry, (block_p, block_c))
+            collected.append(bc)
+        else:
+            carry, _ = body(carry, block_p)
+    x, aux_total2 = carry
+    if cache is not None:
+        new_cache["blocks"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *collected)
+    return x, new_cache, aux_total2
+
+
+def forward(params, tokens, cfg: ModelConfig, rules=None,
+            prefix_embeds=None) -> Tuple[jax.Array, jax.Array]:
+    """Training forward: tokens (B,S_text) -> (logits (B,S,V), aux_loss)."""
+    x = _embed_inputs(params, tokens, cfg, rules, prefix_embeds)
+    x, _, aux = _run_stack(params, x, cfg, rules, mode="train")
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_kind,
+                          cfg.norm_eps)
+    logits = layers.logits_out(params["embed"], x, rules,
+                               softcap=cfg.logit_softcap)
+    return logits, aux
+
+
+def prefill(params, tokens, cache, cfg: ModelConfig, rules=None,
+            prefix_embeds=None):
+    """Fill caches for positions [0, S). Returns (last-token logits, cache)."""
+    x = _embed_inputs(params, tokens, cfg, rules, prefix_embeds)
+    x, new_cache, _ = _run_stack(params, x, cfg, rules, cache=cache,
+                                 mode="prefill")
+    x = layers.apply_norm(params["final_norm"], x[:, -1:], cfg.norm_kind,
+                          cfg.norm_eps)
+    logits = layers.logits_out(params["embed"], x, rules,
+                               softcap=cfg.logit_softcap)
+    return logits, new_cache
+
+
+def decode_step(params, tokens, cache, pos, cfg: ModelConfig, rules=None):
+    """One-token decode. tokens: (B,1); pos: scalar cache write position."""
+    x = _embed_inputs(params, tokens, cfg, rules)
+    x, new_cache, _ = _run_stack(params, x, cfg, rules, cache=cache, pos=pos,
+                                 mode="decode")
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_kind,
+                          cfg.norm_eps)
+    logits = layers.logits_out(params["embed"], x, rules,
+                               softcap=cfg.logit_softcap)
+    return logits, new_cache

@@ -1,0 +1,124 @@
+"""Mixture-of-Experts FFN with sort-based (megablocks-style) dispatch.
+
+Design notes (DESIGN.md §7):
+* Dispatch is *sort-based*, not GShard one-hot-einsum: a (tokens*k) argsort by
+  expert id, a capacity-clipped scatter into an (E, C, D) buffer, a batched
+  expert GEMM, and a weighted scatter-add combine.  This keeps dispatch cost
+  O(tokens*k*D) bytes instead of O(tokens*E*C) FLOPs, which at the assigned
+  shapes (1M tokens, 64 experts) is the difference between a viable layer and
+  a dispatch tensor that dwarfs the expert GEMMs.
+* Expert weights carry logical axis EXPERT -> mesh ``model`` (expert
+  parallelism); the buffer is constrained the same way so XLA SPMD emits the
+  canonical all-to-all on dispatch/combine.
+* Shared experts (deepseek-moe) are algebraically a single wider dense swiglu
+  (sum of always-active swiglu experts == block-diagonal concat), so they are
+  stored as one fused FFN of hidden = num_shared * moe_d_ff.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.sharding import logical as L
+from repro.sharding.logical import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    specs = {
+        "router": ParamSpec((d, e), (L.EMBED, L.EXPERT)),
+        "wi_gate": ParamSpec((e, d, f), (L.EXPERT, L.EMBED, None)),
+        "wi_up": ParamSpec((e, d, f), (L.EXPERT, L.EMBED, None)),
+        "wo": ParamSpec((e, f, d), (L.EXPERT, None, L.EMBED)),
+    }
+    if cfg.num_shared_experts:
+        specs["shared"] = layers.ffn_specs(
+            d, cfg.num_shared_experts * f, "swiglu")
+    return specs
+
+
+def capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(tokens * cfg.top_k / cfg.num_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)     # round up to 8 (TPU sublane multiple)
+
+
+def route(params: dict, xt: jax.Array, cfg: ModelConfig
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (gate_weights (T,K), expert_ids (T,K), aux_loss scalar)."""
+    logits = jnp.einsum(
+        "td,de->te", xt.astype(jnp.float32),
+        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_ids = jax.lax.top_k(probs, cfg.top_k)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+    # Load-balancing aux loss (Switch-style): E * sum(frac_tokens * frac_prob)
+    e = cfg.num_experts
+    onehot = jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32)
+    frac_tokens = onehot.mean(0)
+    frac_probs = probs.mean(0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return gate, expert_ids, aux
+
+
+def apply_moe(params: dict, x: jax.Array, cfg: ModelConfig, rules
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B,S,D), aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    c = capacity(t, cfg)
+    dt = x.dtype
+    if not cfg.moe_cap_shard:
+        # §Perf MoE iteration 2: unconstrained dispatch — let SPMD
+        # propagation place the dispatch buffers (v1 behaviour)
+        rules = None
+
+    xt = x.reshape(t, d)
+    xt = L.constrain(xt, rules, (L.BATCH, L.ACT_EMBED))
+    gate, expert_ids, aux = route(params, xt, cfg)
+
+    flat_e = expert_ids.reshape(t * k)
+    flat_gate = gate.reshape(t * k).astype(dt)
+
+    # --- dispatch: sort token-slots by expert, clip to capacity ------------
+    sort_idx = jnp.argsort(flat_e)                       # stable
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.bincount(flat_e, length=e)
+    seg_start = jnp.cumsum(counts) - counts              # (E,)
+    pos_in_expert = jnp.arange(t * k) - seg_start[sorted_e]
+    keep = pos_in_expert < c
+    token_idx = sort_idx // k                            # sorted-slot -> token
+    # over-capacity slots get index e*c == out-of-bounds -> dropped/zero
+    dest = jnp.where(keep, sorted_e * c + pos_in_expert, e * c)
+
+    buf = jnp.zeros((e * c, d), dtype=dt).at[dest].set(
+        xt.astype(dt)[token_idx], mode="drop")
+    buf = buf.reshape(e, c, d)
+    cap_ax = L.CAPACITY if cfg.moe_cap_shard else None
+    buf = L.constrain(buf, rules, (L.EXPERT, cap_ax, L.ACT_EMBED))
+
+    # --- expert FFN (batched swiglu GEMMs; EXPERT axis -> model mesh) ------
+    gate_h = jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"].astype(dt))
+    up_h = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"].astype(dt))
+    h = jax.nn.silu(gate_h) * up_h
+    h = L.constrain(h, rules, (L.EXPERT, cap_ax, None))
+    out_e = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(dt))
+    out_e = L.constrain(out_e, rules, (L.EXPERT, cap_ax, L.ACT_EMBED))
+
+    # --- combine: gather back to token slots, weight, scatter-add ----------
+    out_flat = out_e.reshape(e * c, d)
+    gathered = out_flat.at[dest].get(mode="fill",
+                                     fill_value=0)       # (T*K, D); dropped->0
+    contrib = gathered * flat_gate[sort_idx][:, None]
+    y = jnp.zeros((t, d), dtype=dt).at[token_idx].add(contrib)
+    y = L.constrain(y, rules, (L.BATCH, L.ACT_EMBED))
+
+    out = y.reshape(b, s, d)
+    if cfg.num_shared_experts:
+        out = out + layers.apply_ffn(params["shared"], x, "swiglu", rules)
+    return L.constrain(out, rules, (L.BATCH, L.SEQ, L.ACT_EMBED)), aux

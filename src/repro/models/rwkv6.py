@@ -1,0 +1,212 @@
+"""RWKV6 ("Finch") token-mix and channel-mix layers — data-dependent decay
+linear recurrence (arXiv:2404.05892), attention-free.
+
+The sequence form here is the pure-jnp reference (lax.scan over time); the
+chunked Pallas kernel lives in kernels/rwkv6_scan and is used via the
+``ArrayIsland`` shim when cfg.attn_impl == "flash" (kernel shims share the
+impl knob).  Decode is a single state update — O(1) per token, which is why
+this arch runs the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.sharding import logical as L
+from repro.sharding.logical import ParamSpec
+
+LORA_RANK = 32
+DECAY_LORA_RANK = 64
+
+
+def num_rwkv_heads(cfg: ModelConfig) -> int:
+    assert cfg.d_model % cfg.rwkv_head_dim == 0
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def time_mix_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = num_rwkv_heads(cfg)
+    dh = cfg.rwkv_head_dim
+    return {
+        # token-shift interpolation: base mus + data-dependent lora (ddlerp)
+        "mu_base": ParamSpec((5, d), (None, L.EMBED), init="zeros"),
+        "mu_w1": ParamSpec((d, 5 * LORA_RANK), (L.EMBED, None)),
+        "mu_w2": ParamSpec((5, LORA_RANK, d), (None, None, L.EMBED)),
+        # projections
+        "wr": ParamSpec((d, d), (L.EMBED, L.MLP)),
+        "wk": ParamSpec((d, d), (L.EMBED, L.MLP)),
+        "wv": ParamSpec((d, d), (L.EMBED, L.MLP)),
+        "wg": ParamSpec((d, d), (L.EMBED, L.MLP)),
+        "wo": ParamSpec((d, d), (L.MLP, L.EMBED)),
+        # data-dependent decay
+        "w0": ParamSpec((d,), (L.EMBED,), init="zeros"),
+        "w_lora_a": ParamSpec((d, DECAY_LORA_RANK), (L.EMBED, None)),
+        "w_lora_b": ParamSpec((DECAY_LORA_RANK, d), (None, L.EMBED)),
+        # bonus (per-head u) and per-head group-norm
+        "u": ParamSpec((h, dh), (L.HEADS, L.HEAD_DIM), init="zeros"),
+        "ln_scale": ParamSpec((d,), (L.EMBED,), init="ones"),
+        "ln_bias": ParamSpec((d,), (L.EMBED,), init="zeros"),
+    }
+
+
+def channel_mix_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamSpec((d,), (L.EMBED,), init="zeros"),
+        "mu_r": ParamSpec((d,), (L.EMBED,), init="zeros"),
+        "wk": ParamSpec((d, f), (L.EMBED, L.MLP)),
+        "wv": ParamSpec((f, d), (L.MLP, L.EMBED)),
+        "wr": ParamSpec((d, d), (L.EMBED, None)),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """shift(x)[t] = x[t-1]; position 0 takes ``prev`` (decode carry) or 0."""
+    shifted = jnp.roll(x, 1, axis=1)
+    first = prev if prev is not None else jnp.zeros_like(x[:, :1])
+    return shifted.at[:, :1].set(first)
+
+
+def _ddlerp(params: dict, x: jax.Array, xx: jax.Array) -> Tuple[jax.Array, ...]:
+    """RWKV6 data-dependent lerp producing the 5 mixed inputs (r,w,k,v,g)."""
+    dt = x.dtype
+    dx = xx - x
+    # low-rank data-dependent offsets
+    mu_base = params["mu_base"].astype(dt)
+    base = x + dx * mu_base[0][None, None, :]
+    z = jnp.tanh(jnp.einsum("bsd,dr->bsr", base, params["mu_w1"].astype(dt)))
+    z = z.reshape(*z.shape[:-1], 5, LORA_RANK)
+    offs = jnp.einsum("bstr,trd->bstd", z, params["mu_w2"].astype(dt))
+    outs = []
+    for i in range(5):
+        mu = mu_base[i][None, None, :] + offs[:, :, i]
+        outs.append(x + dx * mu)
+    return tuple(outs)    # (xr, xw, xk, xv, xg)
+
+
+def _decay(params: dict, xw: jax.Array) -> jax.Array:
+    """Per-channel per-token decay w in (0,1): exp(-exp(w0 + lora(xw)))."""
+    lora = jnp.einsum("bsr,rd->bsd",
+                      jnp.tanh(jnp.einsum("bsd,dr->bsr", xw,
+                                          params["w_lora_a"])),
+                      params["w_lora_b"])
+    return jnp.exp(-jnp.exp((params["w0"][None, None] + lora
+                             ).astype(jnp.float32)))
+
+
+def _group_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+                num_heads: int, eps: float = 64e-5) -> jax.Array:
+    b, s, d = x.shape
+    xh = x.reshape(b, s, num_heads, d // num_heads).astype(jnp.float32)
+    mean = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mean) * jax.lax.rsqrt(var + eps)
+    out = xh.reshape(b, s, d) * scale + bias
+    return out
+
+
+def wkv_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Reference WKV6 recurrence.
+
+    r,k,v,w: (B, S, H, Dh) fp32; u: (H, Dh); state: (B, H, Dh, Dh).
+      S_t = diag(w_t) S_{t-1} + k_t^T v_t
+      y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    Returns y (B, S, H, Dh) and the final state.
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp                      # (B,H,Dh)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    xs = (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          w.swapaxes(0, 1))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.swapaxes(0, 1), state
+
+
+def init_time_state(cfg: ModelConfig, batch: int) -> dict:
+    h, dh = num_rwkv_heads(cfg), cfg.rwkv_head_dim
+    return {
+        "wkv": ParamSpec((batch, h, dh, dh),
+                         (L.BATCH, L.HEADS, None, None),
+                         dtype=jnp.float32, init="zeros"),
+        "shift": ParamSpec((batch, 1, cfg.d_model),
+                           (L.BATCH, None, None),
+                           dtype=jnp.bfloat16, init="zeros"),
+    }
+
+
+def apply_time_mix(params: dict, x: jax.Array, cfg: ModelConfig, rules,
+                   state: Optional[dict] = None
+                   ) -> Tuple[jax.Array, Optional[dict]]:
+    """Sequence-mode (state=None -> zeros) or streaming (carry state)."""
+    b, s, d = x.shape
+    h, dh = num_rwkv_heads(cfg), cfg.rwkv_head_dim
+    dt = x.dtype
+
+    prev = state["shift"].astype(dt) if state is not None else None
+    xx = _token_shift(x, prev)
+    xr, xw, xk, xv, xg = _ddlerp(params, x, xx)
+
+    r = jnp.einsum("bsd,de->bse", xr, params["wr"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", xk, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", xv, params["wv"].astype(dt))
+    g = jnp.einsum("bsd,de->bse", xg, params["wg"].astype(dt))
+    w = _decay(params, xw)                                 # fp32 (B,S,D)
+
+    rh = r.reshape(b, s, h, dh).astype(jnp.float32)
+    kh = k.reshape(b, s, h, dh).astype(jnp.float32)
+    vh = v.reshape(b, s, h, dh).astype(jnp.float32)
+    wh = w.reshape(b, s, h, dh)
+    rh = L.constrain(rh, rules, (L.BATCH, L.SEQ, L.HEADS, L.HEAD_DIM))
+
+    s0 = (state["wkv"] if state is not None
+          else jnp.zeros((b, h, dh, dh), jnp.float32))
+    y, s_final = wkv_scan(rh, kh, vh, wh,
+                          params["u"].astype(jnp.float32), s0)
+
+    y = _group_norm(y.reshape(b, s, d), params["ln_scale"],
+                    params["ln_bias"], h)
+    out = (y.astype(dt) * jax.nn.silu(g))
+    out = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(dt))
+    out = L.constrain(out, rules, (L.BATCH, L.SEQ, L.ACT_EMBED))
+
+    new_state = None
+    if state is not None:
+        new_state = {"wkv": s_final, "shift": x[:, -1:].astype(jnp.bfloat16)}
+    return out, new_state
+
+
+def init_channel_state(cfg: ModelConfig, batch: int) -> dict:
+    return {"shift": ParamSpec((batch, 1, cfg.d_model),
+                               (L.BATCH, None, None),
+                               dtype=jnp.bfloat16, init="zeros")}
+
+
+def apply_channel_mix(params: dict, x: jax.Array, cfg: ModelConfig, rules,
+                      state: Optional[dict] = None
+                      ) -> Tuple[jax.Array, Optional[dict]]:
+    dt = x.dtype
+    prev = state["shift"].astype(dt) if state is not None else None
+    xx = _token_shift(x, prev)
+    dx = xx - x
+    xk = x + dx * params["mu_k"][None, None].astype(dt)
+    xr = x + dx * params["mu_r"][None, None].astype(dt)
+    k = jnp.einsum("bsd,df->bsf", xk, params["wk"].astype(dt))
+    k = jnp.square(jax.nn.relu(k))
+    k = L.constrain(k, rules, (L.BATCH, L.SEQ, L.MLP))
+    vv = jnp.einsum("bsf,fd->bsd", k, params["wv"].astype(dt))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["wr"].astype(dt)))
+    out = L.constrain(r * vv, rules, (L.BATCH, L.SEQ, L.ACT_EMBED))
+    new_state = None
+    if state is not None:
+        new_state = {"shift": x[:, -1:].astype(jnp.bfloat16)}
+    return out, new_state

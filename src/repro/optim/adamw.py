@@ -1,0 +1,116 @@
+"""AdamW with mixed precision and optional int8-compressed moments.
+
+The second-moment compression reuses the quant_cast codec — the optimizer
+state then lives as an int8 "KVStore-engine" object in the polystore sense
+(catalog policy decides; DESIGN.md §3).  Functional API: state is a pytree
+aligned with params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"        # cosine | constant
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))
+    if cfg.schedule == "constant":
+        return cfg.learning_rate * warm
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def init_state(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float
+                        ) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state) -> Tuple[Any, dict]:
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) \
+            if p.ndim > 1 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (delta + decay)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "m": treedef.unflatten([o[1] for o in out]),
+        "v": treedef.unflatten([o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state
+
+
+def compress_moments_int8(state: dict) -> dict:
+    """int8-quantize the second moment (gradient-statistics compression for
+    cross-pod checkpoint traffic); inverse is decompress_moments_int8."""
+    from repro.kernels.quant_cast import ops as qops
+
+    def q(leaf):
+        qv, sc = qops.quantize(leaf)
+        return {"q": qv, "scale": sc, "shape": leaf.shape}
+
+    return {**state, "v": jax.tree.map(
+        q, state["v"], is_leaf=lambda x: isinstance(x, jax.Array))}
+
+
+def decompress_moments_int8(state: dict) -> dict:
+    from repro.kernels.quant_cast import ops as qops
+
+    def dq(leaf):
+        return qops.dequantize(leaf["q"], leaf["scale"], leaf["shape"])
+
+    return {**state, "v": jax.tree.map(
+        dq, state["v"], is_leaf=lambda x: isinstance(x, dict)
+        and "q" in x)}

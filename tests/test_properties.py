@@ -1,0 +1,187 @@
+"""Property-based tests (hypothesis) on system invariants: BQL parsing,
+relational-algebra laws, signature metric axioms, quantization bounds,
+monitor plan selection, MoE dispatch conservation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bql, datamodel as dm, signatures
+from repro.core.monitor import Monitor
+
+_SET = settings(max_examples=40, deadline=None)
+
+names = st.from_regex(r"[a-z][a-z0-9_]{0,8}", fullmatch=True)
+small_ints = st.integers(min_value=0, max_value=100)
+
+
+# -- BQL parser properties ----------------------------------------------------------
+@_SET
+@given(tbl=names, n=st.integers(1, 99))
+def test_bql_island_roundtrip(tbl, n):
+    q = f"bdrel(select * from {tbl} limit {n})"
+    root = bql.parse(q)
+    assert root.island == "relational"
+    assert root.query == f"select * from {tbl} limit {n}"
+
+
+@_SET
+@given(tbl=names, obj=names, depth=st.integers(1, 4))
+def test_bql_nested_cast_depth(tbl, obj, depth):
+    q = f"bdrel(select a from {tbl})"
+    for i in range(depth):
+        island = "bdarray" if i % 2 == 0 else "bdrel"
+        inner_q = f"scan(bdcast({q}, {obj}{i}, 's', x))" \
+            if island == "bdarray" \
+            else f"select a from bdcast({q}, {obj}{i}, 's', x)"
+        q = f"{island}({inner_q})"
+    root = bql.parse(q)
+    seen = sum(1 for node in root.walk()
+               if isinstance(node, bql.CastNode))
+    assert seen == depth
+
+
+# -- relational algebra laws ---------------------------------------------------------
+@st.composite
+def tables(draw):
+    n = draw(st.integers(1, 30))
+    a = draw(st.lists(st.integers(-50, 50), min_size=n, max_size=n))
+    b = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
+    return dm.Table({"a": jnp.asarray(a), "b": jnp.asarray(b)})
+
+
+@_SET
+@given(t=tables(), thresh=st.integers(-50, 50))
+def test_filter_subset_and_idempotent(t, thresh):
+    mask = t.columns["a"] > thresh
+    f1 = t.filter(mask)
+    assert f1.num_rows <= t.num_rows
+    assert bool((f1.columns["a"] > thresh).all()) or f1.num_rows == 0
+    f2 = f1.filter(f1.columns["a"] > thresh)
+    assert f2.num_rows == f1.num_rows            # idempotent
+
+
+@_SET
+@given(t=tables())
+def test_sort_is_ordered_permutation(t):
+    s = t.sort_by("a")
+    assert s.num_rows == t.num_rows
+    arr = np.asarray(s.columns["a"])
+    assert (np.diff(arr) >= 0).all()
+    assert sorted(np.asarray(t.columns["a"]).tolist()) == arr.tolist()
+
+
+@_SET
+@given(t=tables())
+def test_group_agg_sum_conservation(t):
+    g = t.group_agg("b", "sum", "a")
+    total = float(np.asarray(g.columns["sum_a"]).sum())
+    assert total == float(np.asarray(t.columns["a"]).sum())
+
+
+@_SET
+@given(t=tables(), limit=st.integers(1, 40))
+def test_limit_bounds(t, limit):
+    l = t.limit(limit)
+    assert l.num_rows == min(limit, t.num_rows)
+
+
+# -- signature metric axioms -----------------------------------------------------------
+_QUERIES = [
+    "bdrel(select * from t1 limit 5)",
+    "bdrel(select a, b from t2 where a > 3)",
+    "bdarray(filter(arr1, dim1>10))",
+    "bdarray(aggregate(arr2, avg(x)))",
+    "bdtext({ 'op' : 'scan', 'table' : 'logs' })",
+    "bdarray(scan(bdcast(bdrel(select a from t1), c1, 's', array)))",
+]
+
+
+@_SET
+@given(i=st.integers(0, len(_QUERIES) - 1),
+       j=st.integers(0, len(_QUERIES) - 1))
+def test_signature_metric_axioms(i, j):
+    si = signatures.of_query(bql.parse(_QUERIES[i]))
+    sj = signatures.of_query(bql.parse(_QUERIES[j]))
+    assert si.distance(si) == 0.0
+    assert si.distance(sj) == sj.distance(si)
+    assert si.distance(sj) >= 0.0
+    if i == j:
+        assert si.distance(sj) == 0.0
+
+
+# -- monitor best-plan selection ---------------------------------------------------------
+@_SET
+@given(times=st.lists(st.floats(0.001, 10.0), min_size=2, max_size=6,
+                      unique=True))
+def test_monitor_picks_minimum(times):
+    mon = Monitor()
+    sig = signatures.of_query(bql.parse(_QUERIES[0]))
+    for idx, t in enumerate(times):
+        mon.add_measurement(sig, f"qep{idx}", t)
+    best = mon.best_qep(sig)
+    assert best == f"qep{int(np.argmin(times))}"
+
+
+# -- quantization bound -------------------------------------------------------------------
+@_SET
+@given(data=st.lists(st.floats(-1e3, 1e3, allow_nan=False,
+                               allow_infinity=False, width=32),
+                     min_size=1, max_size=512))
+def test_quant_error_bound_holds(data):
+    from repro.kernels.quant_cast import ops
+    x = jnp.asarray(np.asarray(data, np.float32))
+    q, scale = ops.quantize(x)
+    back = ops.dequantize(q, scale, x.shape)
+    # per-block error bound: half a quantization step (+ fp slack)
+    per_block_bound = np.asarray(scale).max() * 0.5 + 1e-5
+    assert float(jnp.max(jnp.abs(back - x))) <= per_block_bound * 1.01
+
+
+# -- MoE dispatch conservation ---------------------------------------------------------------
+@_SET
+@given(seed=st.integers(0, 2 ** 16), cap=st.floats(0.5, 4.0))
+def test_moe_dispatch_conservation(seed, cap):
+    """With enough capacity every token-slot lands exactly once; output is
+    a convex combination (gates sum to 1) of expert outputs."""
+    import dataclasses
+    from repro.models import moe
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=64, head_dim=8,
+        num_experts=4, top_k=2, moe_d_ff=32, capacity_factor=float(cap))
+    rng = np.random.default_rng(seed)
+    params = {
+        "router": jnp.asarray(rng.standard_normal((16, 4)), jnp.float32),
+        "wi_gate": jnp.asarray(rng.standard_normal((4, 16, 32)) * 0.1,
+                               jnp.float32),
+        "wi_up": jnp.asarray(rng.standard_normal((4, 16, 32)) * 0.1,
+                             jnp.float32),
+        "wo": jnp.asarray(rng.standard_normal((4, 32, 16)) * 0.1,
+                          jnp.float32),
+    }
+    x = jnp.asarray(rng.standard_normal((2, 8, 16)), jnp.float32)
+    out, aux = moe.apply_moe(params, x, cfg, None)
+    assert out.shape == x.shape
+    assert bool(jnp.isfinite(out).all())
+    assert float(aux) >= 0.99                   # Switch aux >= 1 at optimum
+    if cap >= 2.0:
+        # full capacity: compare against dense per-token reference
+        xt = x.reshape(-1, 16)
+        logits = xt @ params["router"]
+        probs = jax.nn.softmax(logits, -1)
+        gate, eid = jax.lax.top_k(probs, 2)
+        gate = gate / gate.sum(-1, keepdims=True)
+        outs = []
+        for t in range(xt.shape[0]):
+            acc = jnp.zeros(16)
+            for j in range(2):
+                e = int(eid[t, j])
+                h = jax.nn.silu(xt[t] @ params["wi_gate"][e]) \
+                    * (xt[t] @ params["wi_up"][e])
+                acc = acc + gate[t, j] * (h @ params["wo"][e])
+            outs.append(acc)
+        want = jnp.stack(outs).reshape(2, 8, 16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-4, rtol=2e-3)
