@@ -93,4 +93,30 @@ def run() -> List[Tuple[str, float, str]]:
     err = float(jnp.max(jnp.abs(back - x)))
     rows.append(("kernel/quant_cast_64k", t_k * 1e6,
                  f"compress={ratio:.2f}x_err={err:.2e}"))
+
+    # serial vs concurrent kernel dispatch: 8 independent quant casts run
+    # back-to-back vs overlapped on a 4-thread pool (the executor's
+    # cast-migration concurrency, measured at the kernel level).  Reported,
+    # not asserted — on a GIL-bound CPU interpret path the ratio can dip
+    # below 1; on device backends dispatch overlap wins.
+    from concurrent.futures import ThreadPoolExecutor
+    xs = [jnp.asarray(rng.standard_normal(1 << 14), jnp.float32)
+          for _ in range(8)]
+    for x_ in xs:
+        jax.block_until_ready(qops.quantize(x_))          # compile once
+
+    def _serial():
+        for x_ in xs:
+            jax.block_until_ready(qops.quantize(x_))
+
+    def _concurrent():
+        with ThreadPoolExecutor(max_workers=4) as pool:
+            list(pool.map(
+                lambda x_: jax.block_until_ready(qops.quantize(x_)), xs))
+
+    t_serial = _time(_serial)
+    t_conc = _time(_concurrent)
+    rows.append(("kernel/quant_cast_8x_concurrent", t_conc * 1e6,
+                 f"serial_us={t_serial*1e6:.1f}_"
+                 f"speedup={t_serial/max(t_conc, 1e-12):.2f}x"))
     return rows

@@ -1,12 +1,14 @@
 """Benchmark harness (deliverable (d)): one module per paper table/figure
 plus migration matrix, kernels, planner/monitor, and the dry-run roofline
-reader.  Prints ``name,us_per_call,derived`` CSV.
+reader.  Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` also
+writes a machine-readable report (uploaded as the CI bench-smoke artifact).
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...]
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...] [--json out.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -19,11 +21,13 @@ def main() -> None:
                     help="comma-separated subset of " + ",".join(SUITES))
     ap.add_argument("--runs", type=int, default=50,
                     help="repetitions for fig5/fig6 (paper uses 50)")
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write results as JSON to this path")
     args = ap.parse_args()
     selected = args.only.split(",") if args.only else list(SUITES)
 
     print("name,us_per_call,derived")
-    failures = 0
+    report = {"suites": {}, "failures": []}
     for name in selected:
         try:
             if name == "fig5":
@@ -47,12 +51,19 @@ def main() -> None:
             else:
                 print(f"unknown suite {name}", file=sys.stderr)
                 continue
+            report["suites"][name] = [
+                {"name": row_name, "us_per_call": us, "derived": derived}
+                for row_name, us, derived in rows]
             for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}")
         except Exception:                                 # noqa: BLE001
-            failures += 1
+            report["failures"].append(
+                {"suite": name, "traceback": traceback.format_exc()})
             traceback.print_exc()
-    if failures:
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=1)
+    if report["failures"]:
         sys.exit(1)
 
 

@@ -34,6 +34,17 @@ def status(bd: BigDawg) -> Dict[str, Any]:
         "stragglers": bd.monitor.stragglers(),
         "monitoring_task_running": bd.monitoring_task is not None,
     }
+    cfg = bd.planner_config
+    out["concurrency"] = {
+        "executor_mode": cfg.executor.mode,
+        "executor_max_workers": cfg.executor.max_workers,
+        "plan_parallelism": cfg.plan_parallelism,
+        "early_cancel": cfg.early_cancel,
+        "early_cancel_margin": cfg.early_cancel_margin,
+    }
+    out["plan_cache"] = dict(bd.planner.plan_cache.stats(),
+                             capacity=cfg.cache_size,
+                             max_age_seconds=cfg.cache_max_age_seconds)
     out["catalog"] = {t: len(getattr(bd.catalog, t))
                       for t in bd.catalog.TABLES}
     return out
@@ -52,10 +63,27 @@ def stop(bd: BigDawg) -> None:
 
 
 def main() -> None:
+    from repro.core.executor import ExecutorConfig
+    from repro.core.planner import PlannerConfig
+
     ap = argparse.ArgumentParser(description="BigDAWG admin interface")
     ap.add_argument("command", choices=("status", "demo-status"))
+    ap.add_argument("--executor-mode", choices=("concurrent", "serial"),
+                    default="concurrent",
+                    help="stage scheduler: overlapped DAG or serial")
+    ap.add_argument("--executor-workers", type=int, default=4,
+                    help="thread budget for concurrent stage execution")
+    ap.add_argument("--plan-parallelism", type=int, default=4,
+                    help="concurrent QEPs during training-mode exploration")
+    ap.add_argument("--plan-cache-size", type=int, default=128,
+                    help="signature-keyed plan cache LRU capacity")
     args = ap.parse_args()
-    bd = default_deployment()
+    cfg = PlannerConfig(
+        plan_parallelism=args.plan_parallelism,
+        cache_size=args.plan_cache_size,
+        executor=ExecutorConfig(mode=args.executor_mode,
+                                max_workers=args.executor_workers))
+    bd = default_deployment(planner_config=cfg)
     if args.command == "demo-status":
         from repro.data.mimic import load_mimic_demo
         load_mimic_demo(bd)

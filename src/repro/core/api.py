@@ -13,17 +13,19 @@ from repro.core.engines import (DenseHBMEngine, Engine, HostStoreEngine,
                                 KVStoreEngine, ReplicatedEngine)
 from repro.core.migrator import Migrator
 from repro.core.monitor import Monitor, MonitoringTask
-from repro.core.planner import Planner, Response
+from repro.core.planner import Planner, PlannerConfig, Response
 
 
 class BigDawg:
-    def __init__(self, mesh=None, rules=None) -> None:
+    def __init__(self, mesh=None, rules=None,
+                 planner_config: Optional[PlannerConfig] = None) -> None:
         self.catalog = Catalog()
         self.engines: Dict[str, Engine] = {}
         self.monitor = Monitor()
         self.migrator = Migrator(self.catalog)
+        self.planner_config = planner_config or PlannerConfig()
         self.planner = Planner(self.catalog, self.engines, self.monitor,
-                               self.migrator)
+                               self.migrator, config=self.planner_config)
         self.mesh = mesh
         self.rules = rules
         self.monitoring_task: Optional[MonitoringTask] = None
@@ -66,16 +68,20 @@ class BigDawg:
             for engine in self.engines.values():
                 for op, seconds in engine.op_log[-8:]:
                     self.monitor.observe_engine(engine.name, seconds)
+            # drop plan-cache entries superseded by new measurements
+            self.planner.plan_cache.evict_stale()
         self.monitoring_task = MonitoringTask(self.monitor, refresh,
                                               interval_seconds)
         return self.monitoring_task
 
 
-def default_deployment(mesh=None, rules=None) -> BigDawg:
+def default_deployment(mesh=None, rules=None,
+                       planner_config: Optional[PlannerConfig] = None
+                       ) -> BigDawg:
     """The v0.1 release topology: one relational, one array, one text engine
     (+ a second relational engine, as in the paper's docker-compose which
     ships postgres-data1 and postgres-data2), with binary+staged casts."""
-    bd = BigDawg(mesh=mesh, rules=rules)
+    bd = BigDawg(mesh=mesh, rules=rules, planner_config=planner_config)
     bd.add_engine(HostStoreEngine("hoststore0", mesh, rules))
     bd.add_engine(HostStoreEngine("hoststore1", mesh, rules))
     bd.add_engine(DenseHBMEngine("densehbm0", mesh, rules))

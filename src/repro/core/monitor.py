@@ -41,6 +41,9 @@ class Monitor:
         self._lock = threading.RLock()
         self._benchmarks: Dict[str, Tuple[Signature, Dict[str, QEPRecord]]] \
             = {}
+        # bumped on every new measurement/cost-model for a signature; the
+        # Planner's plan cache uses this to detect stale cached plans
+        self._versions: Dict[str, int] = {}
         self.engine_ewma: Dict[str, float] = {}
         self.engine_ops: Dict[str, int] = {}
 
@@ -69,6 +72,7 @@ class Monitor:
                 signature.key(), (signature, {}))
             records.setdefault(qep_id, QEPRecord(qep_id)
                                ).durations.append(seconds)
+            self._bump(signature.key())
 
     def add_cost_model(self, signature: Signature, qep_id: str,
                        seconds: float) -> None:
@@ -77,6 +81,16 @@ class Monitor:
                 signature.key(), (signature, {}))
             rec = records.setdefault(qep_id, QEPRecord(qep_id))
             rec.cost_model_seconds = seconds
+            self._bump(signature.key())
+
+    def _bump(self, key: str) -> None:
+        self._versions[key] = self._versions.get(key, 0) + 1
+
+    def signature_version(self, signature: Signature) -> int:
+        """Monotone counter of measurements for a signature (plan-cache
+        staleness checks compare this against the version at insert)."""
+        with self._lock:
+            return self._versions.get(signature.key(), 0)
 
     def get_benchmark_performance(self, signature: Signature
                                   ) -> Dict[str, List[float]]:

@@ -5,29 +5,54 @@ routes catalog queries to the catalog module, builds the
 CrossIslandQueryPlan, enumerates semantically-equal QEPs (engine choice per
 intra-island sub-query x cast route per migration), and either
 
-  * training mode: runs every enumerated QEP, records timings in the
+  * training mode: runs the enumerated QEPs — concurrently, up to
+    ``PlannerConfig.plan_parallelism`` at a time, early-cancelling plans
+    already slower than the best finished one — records timings in the
     Monitor, returns the fastest result (paper's isTrainingMode=true), or
-  * lean mode: asks the Monitor for the best QEP of the closest benchmarked
-    signature and runs only that (adding this signature as a new benchmark
-    if nothing matches — §V.E).
+  * lean mode: consults the signature-keyed plan cache first (LRU +
+    monitor-wired staleness eviction); on a hit the query skips plan
+    enumeration entirely.  On a miss it asks the Monitor for the best QEP
+    of the closest benchmarked signature and runs only that (adding this
+    signature as a new benchmark if nothing matches — §V.E).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import bql, signatures
 from repro.core.catalog import Catalog
 from repro.core.engines import Engine
-from repro.core.executor import (Executor, QueryExecutionPlan, QueryResult,
-                                 assign_ids)
+from repro.core.executor import (Executor, ExecutorConfig,
+                                 PlanAbortedException, QueryExecutionPlan,
+                                 QueryResult, assign_ids, cast_parents)
 from repro.core.migrator import Migrator
 from repro.core.monitor import Monitor
+from repro.core.signatures import Signature
 
 MAX_ENUMERATED_PLANS = 16
 CAST_METHODS = ("binary", "staged")
+
+# unique scopes for concurrently executing training-mode plans (cast dest
+# names are suffixed so plans never collide on materialized objects)
+_SCOPE_IDS = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerConfig:
+    """Planner concurrency + caching knobs (threaded through core/api.py)."""
+    plan_parallelism: int = 4            # concurrent QEPs in training mode
+    early_cancel: bool = True            # cancel plans slower than best
+    early_cancel_margin: float = 1.5     # cancel at margin * best_seconds
+    cache_size: int = 128                # plan-cache LRU capacity
+    cache_max_age_seconds: float = 600.0  # plan-cache staleness TTL
+    executor: ExecutorConfig = dataclasses.field(
+        default_factory=ExecutorConfig)
 
 
 @dataclasses.dataclass
@@ -39,20 +64,146 @@ class Response:
     signature_key: str
     training_mode: bool
     plans_considered: int
+    wall_seconds: float = 0.0
+    critical_path_seconds: float = 0.0
+    plan_cache_hit: bool = False
 
     @property
     def seconds(self) -> float:
         return sum(s for _, s in self.stages)
 
 
+@dataclasses.dataclass
+class _CacheEntry:
+    qep_id: str
+    node_engines: Dict[int, str]
+    cast_methods: Dict[int, str]
+    monitor_version: int
+    inserted_at: float
+
+
+class PlanCache:
+    """Signature-keyed LRU of trained QEPs (the lean-mode fast path).
+
+    Eviction: LRU beyond ``max_size``; staleness via (a) a TTL on entry
+    age and (b) the Monitor's per-signature version counter — when new
+    measurements arrive and the Monitor's best QEP for the signature no
+    longer matches the cached one, the entry is dropped.
+    """
+
+    def __init__(self, monitor: Monitor, max_size: int = 128,
+                 max_age_seconds: float = 600.0) -> None:
+        self.monitor = monitor
+        self.max_size = max(1, max_size)
+        self.max_age_seconds = max_age_seconds
+        self._entries: "collections.OrderedDict[str, Tuple[Signature, _CacheEntry]]" \
+            = collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.stale_evictions = 0
+
+    def get(self, sig: Signature) -> Optional[_CacheEntry]:
+        key = sig.key()
+        with self._lock:
+            item = self._entries.get(key)
+            if item is None:
+                self.misses += 1
+                return None
+            _, entry = item
+            if (time.monotonic() - entry.inserted_at
+                    > self.max_age_seconds):
+                del self._entries[key]
+                self.stale_evictions += 1
+                self.misses += 1
+                return None
+            version = self.monitor.signature_version(sig)
+            if version != entry.monitor_version:
+                # new measurements landed; keep the entry only if it is
+                # still the Monitor's best plan for this signature
+                best = self.monitor.best_qep(sig)
+                if best is not None and best != entry.qep_id:
+                    del self._entries[key]
+                    self.stale_evictions += 1
+                    self.misses += 1
+                    return None
+                entry.monitor_version = version
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return entry
+
+    def put(self, sig: Signature, plan: QueryExecutionPlan) -> None:
+        key = sig.key()
+        with self._lock:
+            self._entries[key] = (sig, _CacheEntry(
+                qep_id=plan.qep_id,
+                node_engines=dict(plan.node_engines),
+                cast_methods=dict(plan.cast_methods),
+                monitor_version=self.monitor.signature_version(sig),
+                inserted_at=time.monotonic()))
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.max_size:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+
+    def invalidate(self, sig: Signature) -> None:
+        with self._lock:
+            if self._entries.pop(sig.key(), None) is not None:
+                self.evictions += 1
+
+    def refresh_version(self, sig: Signature) -> None:
+        """Resync the stored Monitor version after the caller records its
+        own measurement for a hit — otherwise every hit's measurement
+        bump would force a full best_qep scan on the next lookup."""
+        with self._lock:
+            item = self._entries.get(sig.key())
+            if item is not None:
+                item[1].monitor_version = \
+                    self.monitor.signature_version(sig)
+
+    def evict_stale(self) -> int:
+        """Drop aged/superseded entries (called from the MonitoringTask
+        refresh loop so background re-benchmarks invalidate stale plans)."""
+        dropped = 0
+        with self._lock:
+            now = time.monotonic()
+            for key in list(self._entries):
+                sig, entry = self._entries[key]
+                aged = now - entry.inserted_at > self.max_age_seconds
+                best = self.monitor.best_qep(sig)
+                superseded = best is not None and best != entry.qep_id
+                if aged or superseded:
+                    del self._entries[key]
+                    self.stale_evictions += 1
+                    dropped += 1
+        return dropped
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"size": len(self._entries), "hits": self.hits,
+                    "misses": self.misses, "evictions": self.evictions,
+                    "stale_evictions": self.stale_evictions}
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
 class Planner:
     def __init__(self, catalog: Catalog, engines: Dict[str, Engine],
-                 monitor: Monitor, migrator: Migrator) -> None:
+                 monitor: Monitor, migrator: Migrator,
+                 config: Optional[PlannerConfig] = None) -> None:
         self.catalog = catalog
         self.engines = engines
         self.monitor = monitor
         self.migrator = migrator
-        self.executor = Executor(engines, migrator, monitor)
+        self.config = config or PlannerConfig()
+        self.executor = Executor(engines, migrator, monitor,
+                                 config=self.config.executor)
+        self.plan_cache = PlanCache(
+            monitor, max_size=self.config.cache_size,
+            max_age_seconds=self.config.cache_max_age_seconds)
 
     # -- plan enumeration -----------------------------------------------------
     def _candidate_engines(self, node: bql.IslandQueryNode) -> List[str]:
@@ -95,13 +246,13 @@ class Planner:
                     f"no engine serves island {nodes[nid].island!r} "
                     f"with the referenced objects")
         plans: List[QueryExecutionPlan] = []
+        parent_by_id = cast_parents(nodes)
         child_of_cast = {}
         parent_of_cast = {}
         for cid, cast in casts.items():
             child_of_cast[cid] = next(
                 nid for nid, n in nodes.items() if n is cast.child)
-            parent_of_cast[cid] = next(
-                nid for nid, n in nodes.items() if cast in n.casts)
+            parent_of_cast[cid] = parent_by_id[id(cast)]
         for combo in itertools.product(*engine_options):
             node_engines = dict(zip(node_ids, combo))
             cast_options = []
@@ -116,6 +267,52 @@ class Planner:
                 if len(plans) >= MAX_ENUMERATED_PLANS:
                     return plans
         return plans
+
+    # -- training mode: concurrent QEP exploration ----------------------------
+    def _explore_plans(self, sig: Signature,
+                       plans: List[QueryExecutionPlan]
+                       ) -> List[Tuple[QueryExecutionPlan, QueryResult]]:
+        """Run enumerated QEPs with a bounded parallelism budget.  A plan
+        whose elapsed wall time already exceeds ``early_cancel_margin`` x
+        the best finished plan's serial-sum is cancelled before its next
+        task starts (its partial work is discarded, nothing recorded)."""
+        cfg = self.config
+        budget = max(1, cfg.plan_parallelism)
+        best_lock = threading.Lock()
+        best_seconds = [float("inf")]
+
+        def run_one(plan: QueryExecutionPlan
+                    ) -> Optional[Tuple[QueryExecutionPlan, QueryResult]]:
+            start = time.perf_counter()
+
+            def should_abort() -> bool:
+                if not cfg.early_cancel:
+                    return False
+                with best_lock:
+                    best = best_seconds[0]
+                return (best < float("inf")
+                        and time.perf_counter() - start
+                        > cfg.early_cancel_margin * best)
+
+            scope = f"qep{next(_SCOPE_IDS)}" if budget > 1 else ""
+            try:
+                res = self.executor.execute_plan(
+                    plan, should_abort=should_abort, scope=scope)
+            except PlanAbortedException:
+                return None
+            self.monitor.add_measurement(sig, plan.qep_id, res.seconds)
+            with best_lock:
+                best_seconds[0] = min(best_seconds[0], res.seconds)
+            return plan, res
+
+        if budget == 1 or len(plans) == 1:
+            outcomes = [run_one(p) for p in plans]
+        else:
+            with ThreadPoolExecutor(max_workers=budget) as pool:
+                outcomes = list(pool.map(run_one, plans))
+        # cancellation requires a finite best_seconds, i.e. at least one
+        # finished plan — so `finished` is never empty
+        return [o for o in outcomes if o is not None]
 
     # -- entry point (paper's Planner.processQuery) ----------------------------
     def process_query(self, userinput: str,
@@ -135,34 +332,71 @@ class Planner:
                 plans_considered=1)
 
         sig = signatures.of_query(root)
+
+        # lean mode: the signature-keyed plan cache skips enumeration
+        if not is_training_mode:
+            t1 = time.perf_counter()
+            cached = self.plan_cache.get(sig)
+            cache_s = time.perf_counter() - t1
+            if cached is not None:
+                plan = QueryExecutionPlan(
+                    root=root, node_engines=dict(cached.node_engines),
+                    cast_methods=dict(cached.cast_methods))
+                nodes, _ = assign_ids(root)
+                if set(plan.node_engines) == set(nodes):
+                    try:
+                        res = self.executor.execute_plan(plan)
+                    except Exception:                     # noqa: BLE001
+                        # cached plan no longer executable (object moved,
+                        # engine dropped) — evict and fall through
+                        self.plan_cache.invalidate(sig)
+                    else:
+                        self.monitor.add_measurement(sig, plan.qep_id,
+                                                     res.seconds)
+                        self.plan_cache.refresh_version(sig)
+                        return Response(
+                            value=res.value, qep_id=plan.qep_id,
+                            stages=[("Parse", parse_s),
+                                    ("Plan cache hit", cache_s)]
+                            + res.stages,
+                            signature_key=sig.key(), training_mode=False,
+                            plans_considered=1,
+                            wall_seconds=res.wall_seconds,
+                            critical_path_seconds=res.critical_path_seconds,
+                            plan_cache_hit=True)
+                else:
+                    self.plan_cache.invalidate(sig)
+
         t1 = time.perf_counter()
         plans = self.enumerate_plans(root)
         plan_s = time.perf_counter() - t1
 
         if is_training_mode:
-            results = []
-            for plan in plans:
-                res = self.executor.execute_plan(plan)
-                self.monitor.add_measurement(sig, plan.qep_id, res.seconds)
-                results.append(res)
-            best = min(results, key=lambda r: r.seconds)
+            finished = self._explore_plans(sig, plans)
+            best_plan, best = min(finished, key=lambda pr: pr[1].seconds)
+            self.plan_cache.put(sig, best_plan)
             return Response(
                 value=best.value, qep_id=best.qep_id,
                 stages=[("Parse", parse_s),
                         ("Plan enumeration", plan_s)] + best.stages,
                 signature_key=sig.key(), training_mode=True,
-                plans_considered=len(plans))
+                plans_considered=len(plans),
+                wall_seconds=best.wall_seconds,
+                critical_path_seconds=best.critical_path_seconds)
 
-        # lean mode: consult the Monitor
+        # lean-mode cache miss: consult the Monitor
         t2 = time.perf_counter()
         best_qid = self.monitor.best_qep(sig)
         chosen = next((p for p in plans if p.qep_id == best_qid), plans[0])
         monitor_s = time.perf_counter() - t2
         res = self.executor.execute_plan(chosen)
         self.monitor.add_measurement(sig, chosen.qep_id, res.seconds)
+        self.plan_cache.put(sig, chosen)
         return Response(
             value=res.value, qep_id=chosen.qep_id,
             stages=[("Parse", parse_s), ("Plan enumeration", plan_s),
                     ("Monitor lookup", monitor_s)] + res.stages,
             signature_key=sig.key(), training_mode=False,
-            plans_considered=len(plans))
+            plans_considered=len(plans),
+            wall_seconds=res.wall_seconds,
+            critical_path_seconds=res.critical_path_seconds)

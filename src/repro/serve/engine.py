@@ -26,6 +26,10 @@ class ServeConfig:
     cache_len: int = 256
     max_new_tokens: int = 32
     quantize_kv_between_waves: bool = False
+    # concurrency knob (same family as core.executor.ExecutorConfig):
+    # waves in flight at once. Each wave owns its KV cache, so waves are
+    # independent; >1 overlaps host-side scheduling with device compute.
+    max_parallel_waves: int = 1
 
 
 @dataclasses.dataclass
@@ -104,7 +108,12 @@ class ServeSession:
 
 
 class Scheduler:
-    """Wave scheduler: FIFO queue packed into max_batch waves."""
+    """Wave scheduler: FIFO queue packed into max_batch waves.
+
+    With ``max_parallel_waves > 1`` waves run overlapped on a thread pool
+    (each wave has its own KV cache; the jitted functions are shared and
+    thread-safe).  Completions are collected in submission order either
+    way, so output ordering is deterministic."""
 
     def __init__(self, session: ServeSession) -> None:
         self.session = session
@@ -115,8 +124,17 @@ class Scheduler:
         self.queue.append(request)
 
     def run(self) -> List[Completion]:
+        waves = []
         while self.queue:
-            wave = self.queue[: self.session.scfg.max_batch]
+            waves.append(self.queue[: self.session.scfg.max_batch])
             self.queue = self.queue[self.session.scfg.max_batch:]
-            self.completed.extend(self.session.run_wave(wave))
+        parallel = max(1, self.session.scfg.max_parallel_waves)
+        if parallel == 1 or len(waves) <= 1:
+            for wave in waves:
+                self.completed.extend(self.session.run_wave(wave))
+        else:
+            from concurrent.futures import ThreadPoolExecutor
+            with ThreadPoolExecutor(max_workers=parallel) as pool:
+                for done in pool.map(self.session.run_wave, waves):
+                    self.completed.extend(done)
         return self.completed

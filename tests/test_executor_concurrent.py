@@ -1,0 +1,285 @@
+"""Concurrent DAG executor + plan-cache tests: DAG construction and
+ordering, serial/concurrent determinism, cross-engine overlap, exception
+propagation from failed sub-queries, early cancel, and plan-cache
+hit/miss/LRU/staleness semantics."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import bql, signatures
+from repro.core.api import default_deployment
+from repro.core.executor import (ExecutorConfig, LocalQueryExecutionException,
+                                 PlanAbortedException, QueryExecutionPlan,
+                                 assign_ids, build_task_graph,
+                                 critical_path_seconds)
+from repro.core.monitor import Monitor
+from repro.core.planner import PlanCache
+from repro.data.mimic import load_mimic_demo
+
+# two independent relational sub-queries feeding one array-island join:
+# the branches share no DAG edges, so a concurrent executor overlaps them
+CROSS_Q = (
+    "bdarray(cross_join("
+    "bdcast(bdrel(select subject_id, dob_year from mimic2v26.d_patients),"
+    " pat_arr, '<dob_year:int32>[subject_id=0:*,1000,0]', array),"
+    "bdcast(bdrel(select poe_id, dose from mimic2v26.poe_order),"
+    " ord_arr, '<dose:double>[poe_id=0:*,1000,0]', array)))")
+
+
+@pytest.fixture(scope="module")
+def bd():
+    bd = default_deployment()
+    load_mimic_demo(bd, num_patients=32, num_orders=64, wave_len=256,
+                    num_logs=16)
+    return bd
+
+
+def _two_engine_plan(bd, root) -> QueryExecutionPlan:
+    """A QEP whose two relational children run on different engines.
+
+    Built explicitly (not via enumerate_plans) so Monitor straggler
+    avoidance accumulated by earlier tests can't hide hoststore1."""
+    nodes, casts = assign_ids(root)
+    assert len(nodes) == 3 and len(casts) == 2
+    return QueryExecutionPlan(
+        root=root,
+        node_engines={0: "hoststore0", 1: "hoststore1", 2: "densehbm0"},
+        cast_methods={cid: "binary" for cid in casts})
+
+
+# -- DAG construction ---------------------------------------------------------
+def test_task_graph_structure():
+    root = bql.parse(CROSS_Q)
+    nodes, casts = assign_ids(root)
+    assert len(nodes) == 3 and len(casts) == 2
+    deps = build_task_graph(nodes, casts)
+    # root node waits on both casts; each cast waits on its child node
+    assert sorted(deps[("node", 2)]) == [("cast", 0), ("cast", 1)]
+    assert deps[("cast", 0)] == [("node", 0)]
+    assert deps[("cast", 1)] == [("node", 1)]
+    assert deps[("node", 0)] == [] and deps[("node", 1)] == []
+
+
+def test_scoped_query_spares_quoted_literals():
+    from repro.core.executor import _scoped_query
+    q = "select c, x from t where label = 'c' and note = \"c c\""
+    out = _scoped_query(q, {"c": "c__qep0"})
+    assert out == ("select c__qep0, x from t where label = 'c'"
+                   " and note = \"c c\"")
+
+
+def test_critical_path_is_longest_chain():
+    root = bql.parse(CROSS_Q)
+    nodes, casts = assign_ids(root)
+    deps = build_task_graph(nodes, casts)
+    durations = {("node", 0): 1.0, ("cast", 0): 1.0,
+                 ("node", 1): 5.0, ("cast", 1): 1.0,
+                 ("node", 2): 1.0}
+    assert critical_path_seconds(deps, durations) == pytest.approx(7.0)
+    assert sum(durations.values()) == pytest.approx(9.0)  # serial sum
+
+
+# -- determinism --------------------------------------------------------------
+def test_concurrent_matches_serial_bitwise(bd):
+    plan = _two_engine_plan(bd, bql.parse(CROSS_Q))
+    ex = bd.planner.executor
+    r_serial = ex.execute_plan(plan, mode="serial")
+    r_conc = ex.execute_plan(plan, mode="concurrent")
+    assert set(r_serial.value.attrs) == set(r_conc.value.attrs)
+    for name in r_serial.value.attrs:
+        np.testing.assert_array_equal(
+            np.asarray(r_serial.value.attrs[name]),
+            np.asarray(r_conc.value.attrs[name]))
+    # canonical stage ordering: same stage names in the same order
+    assert [s for s, _ in r_serial.stages] == [s for s, _ in r_conc.stages]
+    assert r_conc.critical_path_seconds <= r_conc.serial_sum_seconds + 1e-9
+
+
+def test_cross_engine_branches_overlap(bd, monkeypatch):
+    """With latency injected into each sub-query, the concurrent wall time
+    beats serial (branches overlap) while results stay identical."""
+    from repro.core import shims
+    real_execute = shims.execute
+    delay = 0.15
+
+    def slow_execute(island, engine, query):
+        if island == "relational":
+            time.sleep(delay)
+        return real_execute(island, engine, query)
+
+    monkeypatch.setattr(shims, "execute", slow_execute)
+    plan = _two_engine_plan(bd, bql.parse(CROSS_Q))
+    ex = bd.planner.executor
+    r_serial = ex.execute_plan(plan, mode="serial")
+    r_conc = ex.execute_plan(plan, mode="concurrent")
+    for name in r_serial.value.attrs:
+        np.testing.assert_array_equal(
+            np.asarray(r_serial.value.attrs[name]),
+            np.asarray(r_conc.value.attrs[name]))
+    # serial pays both delays on the wall; concurrent pays ~one
+    assert r_serial.wall_seconds >= 2 * delay
+    assert r_conc.wall_seconds < r_serial.wall_seconds
+    assert r_conc.critical_path_seconds < r_conc.serial_sum_seconds
+
+
+# -- failure handling ---------------------------------------------------------
+def test_exception_propagates_from_failed_subquery(bd):
+    q = CROSS_Q.replace("mimic2v26.poe_order", "no_such_table")
+    plans = bd.planner.enumerate_plans(bql.parse(q))
+    ex = bd.planner.executor
+    for mode in ("serial", "concurrent"):
+        with pytest.raises(LocalQueryExecutionException):
+            ex.execute_plan(plans[0], mode=mode)
+
+
+def test_should_abort_raises_plan_aborted(bd):
+    plan = _two_engine_plan(bd, bql.parse(CROSS_Q))
+    ex = bd.planner.executor
+    with pytest.raises(PlanAbortedException):
+        ex.execute_plan(plan, should_abort=lambda: True)
+
+
+def test_aborted_plan_leaves_no_materialized_objects(bd):
+    """A plan cancelled mid-flight must sweep its scoped cast outputs
+    (training-mode early cancel would otherwise leak objects forever)."""
+    plan = _two_engine_plan(bd, bql.parse(CROSS_Q))
+    ex = bd.planner.executor
+    before = {n: e.list_objects() for n, e in bd.engines.items()}
+    calls = [0]
+
+    def abort_after_three() -> bool:
+        calls[0] += 1
+        return calls[0] > 3          # first cast has materialized by then
+
+    with pytest.raises(PlanAbortedException):
+        ex.execute_plan(plan, mode="serial",
+                        should_abort=abort_after_three, scope="leaktest")
+    after = {n: e.list_objects() for n, e in bd.engines.items()}
+    assert after == before
+
+
+def test_identical_cast_subtrees_under_different_parents(bd):
+    """Two structurally identical bdcast subexpressions under different
+    parent nodes must migrate to each parent's own engine (regression:
+    parent lookup by dataclass equality conflated them)."""
+    from repro.core.engines import DenseHBMEngine
+    if "densehbm1" not in bd.engines:
+        bd.add_engine(DenseHBMEngine("densehbm1", None, None))
+    inner = ("bdcast(bdrel(select subject_id, dob_year from"
+             " mimic2v26.d_patients), pa,"
+             " '<dob_year:int32>[subject_id=0:*,1000,0]', array)")
+    q = (f"bdarray(cross_join(scan({inner}),"
+         f" bdcast(bdarray(scan({inner})), pb, 's2', array)))")
+    root = bql.parse(q)
+    nodes, casts = assign_ids(root)
+    assert len(nodes) == 4 and len(casts) == 3
+    # the two identical casts land on different parents: mid + root
+    plan = QueryExecutionPlan(
+        root=root,
+        node_engines={0: "hoststore0", 1: "hoststore0",
+                      2: "densehbm1", 3: "densehbm0"},
+        cast_methods={cid: "binary" for cid in casts})
+    for mode in ("serial", "concurrent"):
+        res = bd.planner.executor.execute_plan(plan, mode=mode)
+        assert "dob_year" in res.value.attrs      # root cross_join ran
+
+
+# -- plan cache ---------------------------------------------------------------
+def _sig_and_plan(query):
+    root = bql.parse(query)
+    sig = signatures.of_query(root)
+    nodes, casts = assign_ids(root)
+    plan = QueryExecutionPlan(
+        root=root, node_engines={nid: "hoststore0" for nid in nodes},
+        cast_methods={cid: "binary" for cid in casts})
+    return sig, plan
+
+
+def test_plan_cache_hit_miss_and_lru_eviction():
+    cache = PlanCache(Monitor(), max_size=2, max_age_seconds=100.0)
+    queries = ["bdrel(select a from t)",
+               "bdrel(select a from t where a > 1)",
+               "bdrel(select a from t order by a limit 5)"]
+    sig0, plan0 = _sig_and_plan(queries[0])
+    assert cache.get(sig0) is None                      # cold miss
+    cache.put(sig0, plan0)
+    hit = cache.get(sig0)
+    assert hit is not None and hit.qep_id == plan0.qep_id
+    for q in queries[1:]:
+        cache.put(*_sig_and_plan(q))
+    assert len(cache) == 2                              # LRU capacity
+    assert cache.get(sig0) is None                      # evicted (oldest)
+    stats = cache.stats()
+    assert stats["hits"] == 1 and stats["evictions"] == 1
+    assert stats["misses"] == 2
+
+
+def test_plan_cache_staleness_eviction_via_monitor():
+    monitor = Monitor()
+    cache = PlanCache(monitor, max_size=8, max_age_seconds=100.0)
+    sig, plan = _sig_and_plan("bdrel(select a from t)")
+    monitor.add_measurement(sig, plan.qep_id, 0.5)
+    cache.put(sig, plan)
+    assert cache.get(sig) is not None
+    # a faster QEP lands in the Monitor -> the cached plan is superseded
+    monitor.add_measurement(sig, "some_other_qep", 0.001)
+    assert cache.get(sig) is None
+    assert cache.stats()["stale_evictions"] == 1
+
+
+def test_plan_cache_ttl_eviction():
+    cache = PlanCache(Monitor(), max_size=8, max_age_seconds=0.0)
+    sig, plan = _sig_and_plan("bdrel(select a from t)")
+    cache.put(sig, plan)
+    time.sleep(0.01)
+    assert cache.get(sig) is None
+    assert cache.stats()["stale_evictions"] == 1
+
+
+def test_evict_stale_sweep():
+    monitor = Monitor()
+    cache = PlanCache(monitor, max_size=8, max_age_seconds=100.0)
+    sig, plan = _sig_and_plan("bdrel(select a from t)")
+    cache.put(sig, plan)
+    monitor.add_measurement(sig, "faster_qep", 1e-6)
+    assert cache.evict_stale() == 1
+    assert len(cache) == 0
+
+
+# -- planner integration ------------------------------------------------------
+def test_training_then_lean_hits_plan_cache(bd):
+    q = ("bdarray(scan(bdcast(bdrel(select poe_id, icustay_id from"
+         " mimic2v26.poe_order), icu_copy,"
+         " '<icustay_id:int32>[poe_id=0:*,1000,0]', array)))")
+    r_train = bd.query(q, training=True)
+    assert r_train.plans_considered > 1
+    r_lean = bd.query(q)
+    assert r_lean.plan_cache_hit
+    assert r_lean.plans_considered == 1                 # skipped enumeration
+    assert r_lean.qep_id == r_train.qep_id
+    assert any("Plan cache hit" in s for s, _ in r_lean.stages)
+    np.testing.assert_array_equal(
+        np.asarray(r_lean.value.attrs["icustay_id"]),
+        np.asarray(r_train.value.attrs["icustay_id"]))
+
+
+def test_training_mode_concurrent_exploration_records_all(bd):
+    q = ("bdarray(scan(bdcast(bdrel(select poe_id, subject_id from"
+         " mimic2v26.poe_order), subj_copy,"
+         " '<subject_id:int32>[poe_id=0:*,2000,0]', array)))")
+    r = bd.query(q, training=True)
+    sig_key = r.signature_key
+    perf = {k: v for k, v in bd.monitor.get_benchmark_performance(
+        signatures.of_query(bql.parse(q))).items() if v}
+    assert len(perf) >= 1                   # at least the winner measured
+    assert r.plans_considered >= len(perf)
+
+
+def test_serial_config_still_works(bd):
+    cfg = ExecutorConfig(mode="serial", max_workers=1)
+    from repro.core.executor import Executor
+    ex = Executor(bd.engines, bd.migrator, bd.monitor, config=cfg)
+    plan = _two_engine_plan(bd, bql.parse(CROSS_Q))
+    res = ex.execute_plan(plan)
+    assert res.value.attrs

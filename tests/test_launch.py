@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.launch.dryrun import collective_stats, _shape_bytes
+from repro.launch.mesh import make_mesh
 from repro.sharding import logical as L
 
 
@@ -46,8 +47,7 @@ def test_collective_stats_ignores_trivial_groups():
 
 
 def test_sharding_divisibility_fallback():
-    mesh = jax.make_mesh((1, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 2), ("data", "model"))
     rules = L.default_rules(mesh)
     # 12 heads on model=2 divides -> sharded; 13 doesn't -> replicated
     ok = L.sharding_for(L.ParamSpec((64, 12, 8),
@@ -63,8 +63,7 @@ def test_sharding_divisibility_fallback():
 def test_pick_rules_kv_policy():
     from repro.launch.specs import pick_rules
     from repro.models import registry
-    mesh = jax.make_mesh((2, 16), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 16), ("data", "model"))
     # kv=16 divides model=16 -> heads sharded, cache seq unsharded
     r1 = pick_rules(registry.get_config("olmoe-1b-7b"), mesh)
     assert r1.mesh_axes(L.KV_HEADS) == "model"

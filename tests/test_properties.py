@@ -4,7 +4,10 @@ monitor plan selection, MoE dispatch conservation."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import bql, datamodel as dm, signatures
 from repro.core.monitor import Monitor

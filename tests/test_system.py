@@ -109,6 +109,28 @@ def test_serving_waves():
     assert all(int(t) < cfg.vocab_size for c in done for t in c.tokens)
 
 
+def test_serving_parallel_waves_deterministic():
+    """max_parallel_waves > 1 overlaps waves on threads; completions must
+    keep submission order and emit identical tokens to serial waves."""
+    cfg = registry.get_config("qwen2-1.5b", reduced=True)
+    params = init_train_state(cfg, jax.random.PRNGKey(0))["params"]
+    runs = []
+    for waves in (1, 2):
+        sess = ServeSession(cfg, params,
+                            ServeConfig(max_batch=2, cache_len=32,
+                                        max_new_tokens=4,
+                                        max_parallel_waves=waves))
+        sched = Scheduler(sess)
+        for r in range(5):
+            sched.submit(Request(r, np.arange(3 + r, dtype=np.int32),
+                                 max_new_tokens=3))
+        runs.append(sched.run())
+    serial, parallel = runs
+    assert [c.rid for c in serial] == [c.rid for c in parallel]
+    for cs, cp in zip(serial, parallel):
+        np.testing.assert_array_equal(cs.tokens, cp.tokens)
+
+
 def test_planner_lean_mode_not_worst_plan():
     """Monitor-informed selection: once trained, lean mode must not pick
     the slowest enumerated plan (the paper's core value proposition)."""
