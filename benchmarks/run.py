@@ -12,7 +12,8 @@ import json
 import sys
 import traceback
 
-SUITES = ("fig5", "fig6", "migration", "kernels", "planner", "roofline")
+SUITES = ("fig5", "fig6", "migration", "kernels", "planner", "stream",
+          "roofline")
 
 
 def main() -> None:
@@ -45,6 +46,9 @@ def main() -> None:
             elif name == "planner":
                 from benchmarks import planner_monitor
                 rows = planner_monitor.run()
+            elif name == "stream":
+                from benchmarks import stream_bench
+                rows = stream_bench.run()
             elif name == "roofline":
                 from benchmarks import roofline
                 rows = roofline.run()

@@ -2,6 +2,7 @@
 of a BigDAWG setup.  Programmatic API + a small CLI:
 
   PYTHONPATH=src python -m repro.core.admin status
+  PYTHONPATH=src python -m repro.core.admin streams   # live streaming demo
 """
 from __future__ import annotations
 
@@ -24,6 +25,8 @@ def status(bd: BigDawg) -> Dict[str, Any]:
             "bytes": int(sum(
                 dm.object_nbytes(engine.get(o)) for o in objs)),
             "ops_logged": len(engine.op_log),
+            "ops_recorded": engine.ops_recorded,
+            "op_log_limit": engine.OP_LOG_LIMIT,
         }
     for isl in bd.catalog.islands.values():
         out["islands"][isl.name] = [
@@ -41,7 +44,12 @@ def status(bd: BigDawg) -> Dict[str, Any]:
         "plan_parallelism": cfg.plan_parallelism,
         "early_cancel": cfg.early_cancel,
         "early_cancel_margin": cfg.early_cancel_margin,
+        "cost_model_cancels": bd.planner.cost_model_cancels,
     }
+    # streaming island: per-stream ring-buffer health + standing queries
+    out["streams"] = bd.streams.status()
+    out["streams"]["monitor_ewma_ms"] = {
+        k: round(v * 1e3, 3) for k, v in bd.monitor.stream_ewma.items()}
     out["plan_cache"] = dict(bd.planner.plan_cache.stats(),
                              capacity=cfg.cache_size,
                              max_age_seconds=cfg.cache_max_age_seconds)
@@ -67,7 +75,9 @@ def main() -> None:
     from repro.core.planner import PlannerConfig
 
     ap = argparse.ArgumentParser(description="BigDAWG admin interface")
-    ap.add_argument("command", choices=("status", "demo-status"))
+    ap.add_argument("command", choices=("status", "demo-status", "streams"))
+    ap.add_argument("--ticks", type=int, default=8,
+                    help="feed batches to run for the streams command")
     ap.add_argument("--executor-mode", choices=("concurrent", "serial"),
                     default="concurrent",
                     help="stage scheduler: overlapped DAG or serial")
@@ -87,6 +97,22 @@ def main() -> None:
     if args.command == "demo-status":
         from repro.data.mimic import load_mimic_demo
         load_mimic_demo(bd)
+    elif args.command == "streams":
+        # live streaming island demo: feed the synthetic MIMIC waveform
+        # stream, run a standing window-average query on every batch
+        from repro.data.mimic import stream_mimic_waveforms
+        bd.register_continuous(
+            "bdarray(aggregate(bdcast(bdstream(window("
+            "mimic2v26.waveform_stream, 64)), w_arr,"
+            " '<signal:double>[tick=0:63,64,0]', array), avg(signal)))",
+            every_n_ticks=1, name="wave_avg")
+        for _ in stream_mimic_waveforms(bd, batch_rows=64,
+                                        num_batches=args.ticks):
+            pass
+        st = status(bd)
+        print(json.dumps({"streams": st["streams"],
+                          "plan_cache": st["plan_cache"]}, indent=1))
+        return
     print(json.dumps(status(bd), indent=1))
 
 

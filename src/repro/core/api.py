@@ -14,6 +14,7 @@ from repro.core.engines import (DenseHBMEngine, Engine, HostStoreEngine,
 from repro.core.migrator import Migrator
 from repro.core.monitor import Monitor, MonitoringTask
 from repro.core.planner import Planner, PlannerConfig, Response
+from repro.stream.continuous import ContinuousQuery, StreamRuntime
 
 
 class BigDawg:
@@ -26,6 +27,8 @@ class BigDawg:
         self.planner_config = planner_config or PlannerConfig()
         self.planner = Planner(self.catalog, self.engines, self.monitor,
                                self.migrator, config=self.planner_config)
+        self.streams = StreamRuntime(self.planner, self.monitor,
+                                     self.engines)
         self.mesh = mesh
         self.rules = rules
         self.monitoring_task: Optional[MonitoringTask] = None
@@ -61,12 +64,33 @@ class BigDawg:
     def query(self, bql: str, training: bool = False) -> Response:
         return self.planner.process_query(bql, is_training_mode=training)
 
+    # -- streaming island (repro.stream) --------------------------------------
+    def register_stream(self, engine_name: str, name: str, fields,
+                        capacity: int = 4096):
+        """Create a ring-buffer stream on a StreamEngine and register it
+        as a catalog object (so the Planner can place streaming nodes)."""
+        from repro.stream.engine import Stream, StreamEngine
+        assert isinstance(self.engines[engine_name], StreamEngine), \
+            engine_name
+        stream = Stream(name, fields, capacity)
+        self.register_object(engine_name, name, stream,
+                             fields=tuple(fields))
+        return stream
+
+    def register_continuous(self, bql: str, every_n_ticks: int = 1,
+                            name: Optional[str] = None) -> ContinuousQuery:
+        """Register a standing BQL query; it re-executes (lean mode, so
+        2nd+ ticks ride the signature plan cache) on every
+        ``every_n_ticks``-th ``self.streams.tick()``."""
+        return self.streams.register_continuous(bql, every_n_ticks, name)
+
     def start_monitoring(self, interval_seconds: float = 30.0
                          ) -> MonitoringTask:
         def refresh() -> None:
-            # re-estimate engine health from recent op logs
+            # re-estimate engine health from recent op logs (bounded ring
+            # buffers — see Engine.OP_LOG_LIMIT / recent_ops)
             for engine in self.engines.values():
-                for op, seconds in engine.op_log[-8:]:
+                for op, seconds in engine.recent_ops(8):
                     self.monitor.observe_engine(engine.name, seconds)
             # drop plan-cache entries superseded by new measurements
             self.planner.plan_cache.evict_stale()
@@ -80,7 +104,12 @@ def default_deployment(mesh=None, rules=None,
                        ) -> BigDawg:
     """The v0.1 release topology: one relational, one array, one text engine
     (+ a second relational engine, as in the paper's docker-compose which
-    ships postgres-data1 and postgres-data2), with binary+staged casts."""
+    ships postgres-data1 and postgres-data2), with binary+staged casts —
+    extended with the streaming island's StreamEngine (S-Store analog,
+    arXiv:1609.07548) whose window views cast into the array island over
+    the binary route and into the relational island over the staged one."""
+    from repro.stream.engine import StreamEngine
+
     bd = BigDawg(mesh=mesh, rules=rules, planner_config=planner_config)
     bd.add_engine(HostStoreEngine("hoststore0", mesh, rules))
     bd.add_engine(HostStoreEngine("hoststore1", mesh, rules))
@@ -97,4 +126,10 @@ def default_deployment(mesh=None, rules=None,
             if not same_kind:
                 bd.register_cast(src, dst, "staged")
     bd.register_cast("densehbm0", "kvstore0", "quant")
+    # streaming island: window->array rides the fast binary route;
+    # window->table pays the staged (format-translating) route
+    bd.add_engine(StreamEngine("streamstore0", mesh, rules))
+    bd.register_cast("streamstore0", "densehbm0", "binary")
+    bd.register_cast("streamstore0", "hoststore0", "staged")
+    bd.register_cast("streamstore0", "hoststore1", "staged")
     return bd

@@ -10,7 +10,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-ISLAND_TOKENS = {"bdrel": "relational", "bdarray": "array", "bdtext": "text"}
+ISLAND_TOKENS = {"bdrel": "relational", "bdarray": "array",
+                 "bdtext": "text", "bdstream": "streaming"}
 ALL_TOKENS = tuple(ISLAND_TOKENS) + ("bdcast", "bdcatalog")
 
 

@@ -13,9 +13,10 @@ registered in one Catalog and reachable through islands + casts.
 """
 from __future__ import annotations
 
+import collections
 import io
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,13 +28,19 @@ from repro.core import datamodel as dm
 class Engine:
     kind = "abstract"
     islands: Tuple[str, ...] = ()
+    # op_log ring-buffer capacity: continuous ingest (streaming island)
+    # would otherwise grow the log without bound — a slow leak; Monitor
+    # feeds only ever read the recent tail, so old entries are droppable
+    OP_LOG_LIMIT = 4096
 
     def __init__(self, name: str, mesh=None, rules=None) -> None:
         self.name = name
         self.mesh = mesh
         self.rules = rules
         self._objects: Dict[str, Any] = {}
-        self.op_log: List[Tuple[str, float]] = []     # (op, seconds)
+        self.op_log: Deque[Tuple[str, float]] = \
+            collections.deque(maxlen=self.OP_LOG_LIMIT)  # (op, seconds)
+        self.ops_recorded = 0             # lifetime count (log may be cut)
 
     # -- object store --------------------------------------------------------
     def put(self, name: str, obj: Any) -> None:
@@ -56,6 +63,21 @@ class Engine:
 
     def record(self, op: str, seconds: float) -> None:
         self.op_log.append((op, seconds))
+        self.ops_recorded += 1
+
+    def recent_ops(self, n: int = 8) -> List[Tuple[str, float]]:
+        """Last ``n`` logged ops (deques don't slice; Monitor feeds use
+        this instead of ``op_log[-n:]``)."""
+        if n <= 0:
+            return []
+        return list(self.op_log)[-n:]
+
+    def reset_op_log(self) -> int:
+        """Clear the bounded op log; returns how many entries were
+        dropped (lifetime ``ops_recorded`` is preserved)."""
+        dropped = len(self.op_log)
+        self.op_log.clear()
+        return dropped
 
     # -- migration formats ----------------------------------------------------
     def export_binary(self, name: str) -> Tuple[Any, Dict[str, Any]]:

@@ -31,6 +31,15 @@ class LocalQueryExecutionException(Exception):
     pass
 
 
+class DataUnavailableException(Exception):
+    """Marker base for *data-dependent, transient* island errors (e.g. a
+    stream window that isn't materializable yet): the plan itself is
+    valid and re-running it later may succeed, so the Planner must not
+    evict a cached plan when one of these (or a LocalQueryExecution-
+    Exception caused by one) surfaces.  Island shims raise subclasses —
+    see repro.stream.engine.StreamException."""
+
+
 class PlanAbortedException(Exception):
     """Raised when a plan execution is cancelled (training-mode early
     cancel: the plan is already slower than the best finished one)."""

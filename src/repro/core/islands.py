@@ -2,11 +2,17 @@
 An island provides location independence among its engines; the engine-
 native escape hatch (semantic completeness) is ``Engine.get``/``put`` plus
 each engine's own methods.
+
+Beyond the v0.1 release's three islands, this reproduction adds the
+``streaming`` island the architecture papers call for (arXiv:1609.07548,
+arXiv:1602.08791: S-Store as a polystore member): bounded ring-buffer
+streams whose window views materialize as relational/array objects —
+see ``repro.stream``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Tuple, Union
 
 from repro.core import datamodel as dm
 
@@ -16,7 +22,8 @@ class Island:
     name: str
     data_model: str
     operations: Tuple[str, ...]
-    result_type: type
+    # a type, or a tuple of types (isinstance-compatible)
+    result_type: Union[type, Tuple[type, ...]]
 
 
 ISLANDS = {
@@ -34,6 +41,11 @@ ISLANDS = {
         name="text", data_model="sorted key-value rows",
         operations=("scan", "range"),
         result_type=list),
+    "streaming": Island(
+        name="streaming", data_model="append-only bounded row streams",
+        operations=("append", "window", "aggregate", "rate", "snapshot"),
+        # windows materialize as arrays, snapshots/rates as tables
+        result_type=(dm.ArrayObject, dm.Table)),
 }
 
 

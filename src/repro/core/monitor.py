@@ -46,6 +46,9 @@ class Monitor:
         self._versions: Dict[str, int] = {}
         self.engine_ewma: Dict[str, float] = {}
         self.engine_ops: Dict[str, int] = {}
+        # per-continuous-query tick health (repro.stream.continuous)
+        self.stream_ewma: Dict[str, float] = {}
+        self.stream_stats: Dict[str, Dict[str, int]] = {}
 
     # -- benchmark API (paper naming) ----------------------------------------
     def add_benchmarks(self, signature: Signature, lean: bool,
@@ -115,6 +118,24 @@ class Monitor:
                     best, best_d = sig, d
             return best
 
+    def estimate_seconds(self, signature: Signature, qep_id: str) -> float:
+        """Pre-execution serial-sum estimate for one QEP of a signature:
+        mean of measured durations, else the AOT cost model, else — via
+        the closest benchmarked signature (QEP ids name engine/cast
+        combos, so they transfer across signatures) — the same; inf when
+        the Monitor has no history at all (the Planner's cost-model
+        early-cancel then falls back to wall-clock cancel)."""
+        with self._lock:
+            entry = self._benchmarks.get(signature.key())
+            if entry is not None and qep_id in entry[1]:
+                return entry[1][qep_id].best_estimate()
+            closest = self.get_closest_signature(signature)
+            if closest is not None:
+                entry = self._benchmarks.get(closest.key())
+                if entry is not None and qep_id in entry[1]:
+                    return entry[1][qep_id].best_estimate()
+            return float("inf")
+
     def best_qep(self, signature: Signature) -> Optional[str]:
         with self._lock:
             entry = self._benchmarks.get(signature.key())
@@ -141,6 +162,23 @@ class Monitor:
                 + (1 - self.EWMA_ALPHA) * prev)
             self.engine_ops[engine_name] = \
                 self.engine_ops.get(engine_name, 0) + 1
+
+    # -- continuous-query health (streaming island) ---------------------------
+    def observe_stream(self, name: str, latency_seconds: float,
+                       dropped: int = 0, lagging: bool = False) -> None:
+        """Record one standing-query tick: execution latency EWMA plus
+        cumulative drop/backpressure counters (repro.stream feeds this)."""
+        with self._lock:
+            prev = self.stream_ewma.get(name)
+            self.stream_ewma[name] = (
+                latency_seconds if prev is None
+                else self.EWMA_ALPHA * latency_seconds
+                + (1 - self.EWMA_ALPHA) * prev)
+            stats = self.stream_stats.setdefault(
+                name, {"ticks": 0, "dropped": 0, "backpressure": 0})
+            stats["ticks"] += 1
+            stats["dropped"] += int(dropped)
+            stats["backpressure"] += int(bool(lagging))
 
     def stragglers(self, factor: float = 3.0) -> List[str]:
         """Engines whose EWMA latency exceeds ``factor`` x fleet median."""

@@ -6,9 +6,11 @@ CrossIslandQueryPlan, enumerates semantically-equal QEPs (engine choice per
 intra-island sub-query x cast route per migration), and either
 
   * training mode: runs the enumerated QEPs — concurrently, up to
-    ``PlannerConfig.plan_parallelism`` at a time, early-cancelling plans
-    already slower than the best finished one — records timings in the
-    Monitor, returns the fastest result (paper's isTrainingMode=true), or
+    ``PlannerConfig.plan_parallelism`` at a time, cost-model-cancelling
+    plans the Monitor already estimates as hopeless before any work runs
+    and wall-clock-cancelling plans slower than the best finished one —
+    records timings in the Monitor, returns the fastest result (paper's
+    isTrainingMode=true), or
   * lean mode: consults the signature-keyed plan cache first (LRU +
     monitor-wired staleness eviction); on a hit the query skips plan
     enumeration entirely.  On a miss it asks the Monitor for the best QEP
@@ -28,9 +30,10 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core import bql, signatures
 from repro.core.catalog import Catalog
 from repro.core.engines import Engine
-from repro.core.executor import (Executor, ExecutorConfig,
-                                 PlanAbortedException, QueryExecutionPlan,
-                                 QueryResult, assign_ids, cast_parents)
+from repro.core.executor import (DataUnavailableException, Executor,
+                                 ExecutorConfig, PlanAbortedException,
+                                 QueryExecutionPlan, QueryResult,
+                                 assign_ids, cast_parents)
 from repro.core.migrator import Migrator
 from repro.core.monitor import Monitor
 from repro.core.signatures import Signature
@@ -49,6 +52,10 @@ class PlannerConfig:
     plan_parallelism: int = 4            # concurrent QEPs in training mode
     early_cancel: bool = True            # cancel plans slower than best
     early_cancel_margin: float = 1.5     # cancel at margin * best_seconds
+    # after this many consecutive cost-model cancels a QEP runs once
+    # anyway, refreshing its Monitor estimate (stale estimates must not
+    # blacklist a plan forever)
+    cost_cancel_reprobe: int = 4
     cache_size: int = 128                # plan-cache LRU capacity
     cache_max_age_seconds: float = 600.0  # plan-cache staleness TTL
     executor: ExecutorConfig = dataclasses.field(
@@ -204,6 +211,11 @@ class Planner:
         self.plan_cache = PlanCache(
             monitor, max_size=self.config.cache_size,
             max_age_seconds=self.config.cache_max_age_seconds)
+        # QEPs cancelled by the Monitor cost model before any work ran,
+        # and per-(signature, qep) consecutive-cancel streaks driving the
+        # periodic re-probe (see PlannerConfig.cost_cancel_reprobe)
+        self.cost_model_cancels = 0
+        self._cancel_streaks: Dict[Tuple[str, str], int] = {}
 
     # -- plan enumeration -----------------------------------------------------
     def _candidate_engines(self, node: bql.IslandQueryNode) -> List[str]:
@@ -272,11 +284,51 @@ class Planner:
     def _explore_plans(self, sig: Signature,
                        plans: List[QueryExecutionPlan]
                        ) -> List[Tuple[QueryExecutionPlan, QueryResult]]:
-        """Run enumerated QEPs with a bounded parallelism budget.  A plan
-        whose elapsed wall time already exceeds ``early_cancel_margin`` x
-        the best finished plan's serial-sum is cancelled before its next
-        task starts (its partial work is discarded, nothing recorded)."""
+        """Run enumerated QEPs with a bounded parallelism budget.
+
+        Two early-cancel tiers (both under ``PlannerConfig.early_cancel``):
+
+        * cost-model cancel — before anything runs, plans whose
+          Monitor-estimated serial-sum (measured mean, else AOT cost
+          model, else the closest benchmarked signature's record) already
+          exceeds ``early_cancel_margin`` x the best *estimate* are
+          dropped outright; plans the Monitor has no history for always
+          run, so new QEPs still get measured, and after
+          ``cost_cancel_reprobe`` consecutive cancels a plan runs once
+          anyway so a stale estimate can't blacklist it forever;
+        * wall-clock cancel — the fallback when estimates are missing or
+          wrong: a running plan whose elapsed wall time exceeds the
+          margin x the best finished plan's serial-sum is cancelled
+          before its next task starts (partial work discarded, nothing
+          recorded).
+        """
         cfg = self.config
+        if cfg.early_cancel and len(plans) > 1:
+            estimates = {p.qep_id: self.monitor.estimate_seconds(
+                sig, p.qep_id) for p in plans}
+            finite = [v for v in estimates.values() if v < float("inf")]
+            if finite:
+                cutoff = cfg.early_cancel_margin * min(finite)
+                best_plan = min(plans,
+                                key=lambda p: estimates[p.qep_id])
+                keep = []
+                for p in plans:
+                    est = estimates[p.qep_id]
+                    streak_key = (sig.key(), p.qep_id)
+                    if (p is best_plan or est == float("inf")
+                            or est <= cutoff):
+                        keep.append(p)
+                        self._cancel_streaks.pop(streak_key, None)
+                        continue
+                    streak = self._cancel_streaks.get(streak_key, 0) + 1
+                    if streak > cfg.cost_cancel_reprobe:
+                        # re-probe: run it once so the estimate refreshes
+                        keep.append(p)
+                        self._cancel_streaks.pop(streak_key, None)
+                    else:
+                        self._cancel_streaks[streak_key] = streak
+                        self.cost_model_cancels += 1
+                plans = keep
         budget = max(1, cfg.plan_parallelism)
         best_lock = threading.Lock()
         best_seconds = [float("inf")]
@@ -346,7 +398,16 @@ class Planner:
                 if set(plan.node_engines) == set(nodes):
                     try:
                         res = self.executor.execute_plan(plan)
-                    except Exception:                     # noqa: BLE001
+                    except Exception as exc:              # noqa: BLE001
+                        if isinstance(
+                                exc, DataUnavailableException
+                        ) or isinstance(exc.__cause__,
+                                        DataUnavailableException):
+                            # transient data-dependent island error (e.g.
+                            # a window not complete yet): the cached plan
+                            # is still the right one — surface the error
+                            # without paying a re-enumeration next tick
+                            raise
                         # cached plan no longer executable (object moved,
                         # engine dropped) — evict and fall through
                         self.plan_cache.invalidate(sig)

@@ -7,6 +7,8 @@ to *parse and execute* the island language over the engine's stored objects:
   array island      — AFL subset (scan/filter/project/aggregate/cross_join/
                       redimension/sort)
   text island       — JSON op spec ({'op': 'scan'|'range', 'table': ...})
+  streaming island  — functional ops over ring-buffer streams (append/
+                      window/aggregate/rate/snapshot), repro.stream.shim
 """
 from __future__ import annotations
 
@@ -321,4 +323,7 @@ def execute(island: str, engine: Engine, query: str):
         return execute_afl(engine, query)
     if island == "text":
         return execute_text(engine, query)
+    if island == "streaming":
+        from repro.stream.shim import execute_stream
+        return execute_stream(engine, query)
     raise ValueError(f"unknown island {island}")

@@ -15,7 +15,9 @@ from repro.core import bql
 _OP_WORDS = ("select", "filter", "join", "cross_join", "project", "aggregate",
              "redimension", "sort", "scan", "range", "group", "order",
              "limit", "count", "sum", "avg", "min", "max", "where",
-             "distinct")
+             "distinct",
+             # streaming island (repro.stream.shim)
+             "append", "window", "rate", "snapshot")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -4,8 +4,16 @@ patient history into the relational engine (PostgreSQL analog), physiologic
 waveforms into the array engine (SciDB analog), free-form text into the KV
 engine (Accumulo analog) — exactly the default placement of the v0.1
 release scripts.
+
+``stream_mimic_waveforms`` is the *live* counterpart: physiologic
+waveforms arrive continuously in the real workload, so it feeds the same
+synthetic signal batch-by-batch into the streaming island (paper §III's
+S-Store member; see ``repro.stream``), ticking the standing-query runtime
+after every batch.
 """
 from __future__ import annotations
+
+from typing import Dict, Iterator
 
 import numpy as np
 import jax.numpy as jnp
@@ -68,3 +76,38 @@ def load_mimic_demo(bd: BigDawg, *, num_patients: int = 256,
                       f"hr={int(rng.integers(50, 120))}")
     bd.register_object("kvstore0", "mimic_logs", dm.KVTable(keys, values),
                        fields=("row", "colfam", "colqual", "value"))
+
+
+def stream_mimic_waveforms(bd: BigDawg, *, batch_rows: int = 64,
+                           num_batches: int = 32, capacity: int = 8192,
+                           seed: int = 0,
+                           name: str = "mimic2v26.waveform_stream",
+                           engine_name: str = "streamstore0",
+                           tick: bool = True) -> Iterator[Dict]:
+    """Live MIMIC waveform feed: appends synthetic physiologic batches to
+    a ring-buffer stream on the streaming island, one batch per
+    iteration, advancing the continuous-query runtime after each.
+
+    The signal is the same deterministic sine+noise family as
+    ``load_mimic_demo``'s batch waveform, phased by the stream's global
+    sequence number so a resumed feed continues the waveform seamlessly.
+    Yields a per-batch dict with append counts and the standing-query
+    responses that ran on that tick.
+    """
+    rng = np.random.default_rng(seed)
+    engine = bd.engines[engine_name]
+    if not engine.has(name):
+        bd.register_stream(engine_name, name, ("signal", "hr"), capacity)
+    stream = engine.get(name)
+    for b in range(num_batches):
+        t = stream.total_appended + np.arange(batch_rows,
+                                              dtype=np.float64)
+        signal = (np.sin(2 * np.pi * t / 360.0)
+                  + 0.05 * rng.standard_normal(batch_rows))
+        hr = 75.0 + 10.0 * np.sin(2 * np.pi * t / 3600.0) \
+            + rng.standard_normal(batch_rows)
+        counts = stream.append({"signal": signal, "hr": hr})
+        ran = bd.streams.tick() if tick else []
+        yield {"batch": b, **counts,
+               "ran": [(cq_name, resp.plan_cache_hit)
+                       for cq_name, resp in ran]}

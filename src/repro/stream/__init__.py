@@ -1,0 +1,18 @@
+"""Streaming island (paper §III; arXiv:1609.07548 §"S-Store"): the
+BigDAWG architecture papers define a streaming engine as a first-class
+polystore member alongside the relational, array and text engines.  This
+package is that member for the reproduction:
+
+  engine.py     — ``Stream`` (append-only bounded ring buffer) and
+                  ``StreamEngine`` (S-Store analog, Catalog-registered)
+  shim.py       — the streaming island language (append / window /
+                  aggregate / rate / snapshot), windows materialized as
+                  ``dm.ArrayObject`` / ``dm.Table``
+  continuous.py — standing queries: ``register_continuous`` compiles a BQL
+                  query once and re-executes it per tick through the
+                  Planner's signature plan cache + concurrent Executor
+"""
+from repro.stream.continuous import ContinuousQuery, StreamRuntime
+from repro.stream.engine import Stream, StreamEngine
+
+__all__ = ["ContinuousQuery", "Stream", "StreamEngine", "StreamRuntime"]

@@ -1,0 +1,208 @@
+"""Continuous (standing) queries over the polystore (arXiv:1602.08791
+§streaming: S-Store's standing queries; paper §III's streaming island).
+
+``StreamRuntime.register_continuous(bql, every_n_ticks)`` registers a BQL
+query that re-executes as new data lands.  The query is parsed/validated
+once at registration and then always submitted in *lean* mode, so its
+first tick populates the Planner's signature-keyed plan cache and every
+later tick skips plan enumeration entirely (the PR-1 fast path); stage
+execution rides the concurrent DAG Executor.
+
+Per-tick metrics — execution latency, plan-cache hit, rows dropped by
+ring-buffer backpressure since the previous execution, and whether the
+query fell behind the arrival cadence — are kept per query and fed to the
+Monitor (``observe_stream``), surfacing in ``admin.status()``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import bql, signatures
+
+_CQ_IDS = itertools.count()
+
+
+@dataclasses.dataclass
+class ContinuousQuery:
+    """One standing query: BQL text + cadence + rolling metrics."""
+    name: str
+    bql: str
+    every_n_ticks: int = 1
+    executions: int = 0
+    cache_hits: int = 0
+    errors: int = 0              # failed executions (tick carries on)
+    last_error: Optional[str] = None
+    drops_seen: int = 0          # ring-buffer rows lost between executions
+    backpressure: int = 0        # executions slower than their own cadence
+    _dropped_at_last_exec: int = 0
+    _last_exec_start: float = 0.0
+    _root: Any = None            # parsed plan tree (set at registration)
+    # memoized stream-name resolution for _dropped_for: the referenced
+    # names only change when the deployment's stream set does
+    _stream_set: Optional[frozenset] = None
+    _stream_refs: Tuple[str, ...] = ()
+    last_value: Any = None
+    last_latency_seconds: float = 0.0
+    latencies: "collections.deque[float]" = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=256))
+
+    def metrics(self) -> Dict[str, Any]:
+        lat = sorted(self.latencies)
+        p50 = lat[len(lat) // 2] if lat else 0.0
+        return {"bql": self.bql, "every_n_ticks": self.every_n_ticks,
+                "executions": self.executions,
+                "cache_hits": self.cache_hits,
+                "errors": self.errors,
+                "last_error": self.last_error,
+                "drops_seen": self.drops_seen,
+                "backpressure": self.backpressure,
+                "last_latency_ms": round(
+                    self.last_latency_seconds * 1e3, 3),
+                "p50_latency_ms": round(p50 * 1e3, 3)}
+
+
+class StreamRuntime:
+    """Drives the registered continuous queries.
+
+    ``tick()`` is the unit of progress: a data feed appends a batch to its
+    stream(s), then calls ``tick()``; every standing query whose cadence
+    divides the tick counter re-executes.  Ticks are cooperative (caller's
+    thread) so results are deterministic and tests stay in control; a
+    background driver can simply call ``tick()`` from its own loop.
+    """
+
+    def __init__(self, planner, monitor, engines: Dict[str, Any]) -> None:
+        self.planner = planner
+        self.monitor = monitor
+        self.engines = engines
+        self.queries: Dict[str, ContinuousQuery] = {}
+        self.ticks = 0
+        self._last_tick_time: Optional[float] = None
+        self._tick_gap_seconds = 0.0
+        self._lock = threading.RLock()
+
+    # -- registration ---------------------------------------------------------
+    def register_continuous(self, query: str, every_n_ticks: int = 1,
+                            name: Optional[str] = None) -> ContinuousQuery:
+        """Register a standing BQL query; parse errors surface here, not
+        on the first tick.  Returns the ContinuousQuery handle."""
+        assert every_n_ticks >= 1
+        root = bql.parse(query)            # validate once, at registration
+        with self._lock:
+            cq_name = name or f"cq{next(_CQ_IDS)}"
+            if cq_name in self.queries:
+                raise ValueError(f"continuous query {cq_name!r} exists")
+            cq = ContinuousQuery(name=cq_name, bql=query,
+                                 every_n_ticks=every_n_ticks)
+            cq._root = root
+            # only count drops that happen within this query's lifetime
+            cq._dropped_at_last_exec = self._dropped_for(cq)
+            self.queries[cq_name] = cq
+            return cq
+
+    def deregister(self, name: str) -> None:
+        with self._lock:
+            self.queries.pop(name, None)
+
+    # -- the tick loop --------------------------------------------------------
+    def _dropped_for(self, cq: ContinuousQuery) -> int:
+        """Cumulative ring-buffer drops on the streams this query's BQL
+        actually reads (a query over a stable stream must not be charged
+        with another stream's overflow).  The parse-tree walk + name
+        regex only reruns when the deployment's stream set changes."""
+        from repro.stream.engine import StreamEngine
+        streams: Dict[str, Any] = {}
+        for engine in self.engines.values():
+            if isinstance(engine, StreamEngine):
+                streams.update(engine.streams())
+        names = frozenset(streams)
+        if cq._stream_set != names:
+            refs = set()
+            for node in cq._root.walk():
+                if (isinstance(node, bql.IslandQueryNode)
+                        and node.island == "streaming"):
+                    refs.update(signatures._referenced_objects(
+                        node, engines_have=lambda tok: tok in streams))
+            cq._stream_refs = tuple(sorted(refs & names))
+            cq._stream_set = names
+        return sum(streams[r].total_dropped for r in cq._stream_refs)
+
+    def tick(self) -> List[Tuple[str, Any]]:
+        """Advance one tick; run every due standing query in lean mode.
+        A failing query is recorded on its own metrics (``errors`` /
+        ``last_error``) and never aborts the tick or the other queries.
+        Returns [(query name, Response)] for the queries that ran."""
+        with self._lock:
+            now = time.monotonic()
+            if self._last_tick_time is not None:
+                self._tick_gap_seconds = now - self._last_tick_time
+            self._last_tick_time = now
+            self.ticks += 1
+            due = [cq for cq in self.queries.values()
+                   if self.ticks % cq.every_n_ticks == 0]
+        ran: List[Tuple[str, Any]] = []
+        for cq in due:
+            # a query's latency budget is its own cadence: the gap since
+            # its previous execution (~ every_n_ticks x the tick gap)
+            exec_start = time.monotonic()
+            budget = (exec_start - cq._last_exec_start
+                      if cq._last_exec_start else 0.0)
+            cq._last_exec_start = exec_start
+            t0 = time.perf_counter()
+            try:
+                response = self.planner.process_query(
+                    cq.bql, is_training_mode=False)
+            except Exception as exc:                     # noqa: BLE001
+                # isolate failures (e.g. a tumbling window not complete
+                # yet): the feed and the other standing queries carry on
+                with self._lock:
+                    cq.errors += 1
+                    cq.last_error = f"{type(exc).__name__}: {exc}"
+                continue
+            latency = time.perf_counter() - t0
+            # rows this query's ring buffers dropped since it last looked
+            # (data the standing query never got to see)
+            dropped_total = self._dropped_for(cq)
+            drops = dropped_total - cq._dropped_at_last_exec
+            cq._dropped_at_last_exec = dropped_total
+            with self._lock:
+                cq.executions += 1
+                cq.last_value = response.value
+                cq.last_latency_seconds = latency
+                cq.latencies.append(latency)
+                if response.plan_cache_hit:
+                    cq.cache_hits += 1
+                cq.drops_seen += drops
+                lagging = budget > 0 and latency > budget
+                if lagging:
+                    cq.backpressure += 1
+            self.monitor.observe_stream(cq.name, latency, dropped=drops,
+                                        lagging=lagging)
+            ran.append((cq.name, response))
+        return ran
+
+    def run_ticks(self, n: int) -> List[List[Tuple[str, Any]]]:
+        return [self.tick() for _ in range(n)]
+
+    # -- introspection --------------------------------------------------------
+    def status(self) -> Dict[str, Any]:
+        from repro.stream.engine import StreamEngine
+        with self._lock:
+            out: Dict[str, Any] = {
+                "ticks": self.ticks,
+                "queries": {n: cq.metrics()
+                            for n, cq in self.queries.items()},
+                "streams": {}}
+        for ename, engine in self.engines.items():
+            if isinstance(engine, StreamEngine):
+                for sname, stream in engine.streams().items():
+                    info = stream.stats()
+                    info["engine"] = ename
+                    info["rows_per_second"] = round(stream.rate(), 1)
+                    out["streams"][sname] = info
+        return out

@@ -1,0 +1,199 @@
+"""StreamEngine — the S-Store analog of the polystore (paper §III lists a
+streaming island among BigDAWG's islands; the v0.1 release ships without
+one, this module adds it).
+
+A ``Stream`` is an append-only, bounded ring buffer of rows over a fixed
+set of float64 fields.  When the buffer is full the oldest rows are
+overwritten (drop-oldest backpressure) and counted in ``total_dropped``.
+Window views over the buffer materialize as island data-model objects:
+
+  snapshot  — every buffered row, oldest first, as a ``dm.Table``
+              (with a ``seq`` column of global sequence numbers)
+  tumbling  — the most recent *complete* seq-aligned window of ``size``
+              rows as a 1-D ``dm.ArrayObject`` (dims ``("tick",)``)
+  sliding   — windows of ``size`` rows every ``slide`` rows over the
+              buffer as a 2-D ``dm.ArrayObject`` (dims ``("window",
+              "tick")``)
+
+Materialized windows then ride the existing Migrator casts into the array
+island (binary) or the relational island (staged) — see
+``core/api.default_deployment``.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import datamodel as dm
+from repro.core.engines import ENGINE_KINDS, Engine
+from repro.core.executor import DataUnavailableException
+
+
+class StreamException(DataUnavailableException):
+    """Data-dependent streaming error (window not complete / evicted,
+    schema mismatch on append).  Subclasses the core's transient marker
+    so cached plans survive it."""
+
+
+class Stream:
+    """Append-only bounded ring buffer of rows (fixed float64 fields)."""
+
+    def __init__(self, name: str, fields: Sequence[str],
+                 capacity: int = 4096) -> None:
+        assert fields, "a stream needs at least one field"
+        assert capacity > 0, "capacity must be positive"
+        self.name = name
+        self.fields: Tuple[str, ...] = tuple(fields)
+        self.capacity = int(capacity)
+        self._cols = {f: np.zeros(self.capacity, np.float64)
+                      for f in self.fields}
+        self._next = 0                    # ring write position
+        self._count = 0                   # valid rows in the buffer
+        self.total_appended = 0           # global sequence high-water mark
+        self.total_dropped = 0            # rows overwritten before read
+        # (wall_time, rows) of recent appends, for rate()
+        self._append_times: "collections.deque[Tuple[float, int]]" = \
+            collections.deque(maxlen=64)
+        self._lock = threading.Lock()
+
+    # -- ingest ---------------------------------------------------------------
+    def append(self, rows: Dict[str, Iterable[float]]) -> Dict[str, int]:
+        """Append a batch of rows (column dict); returns counts.
+
+        Rows beyond ``capacity`` overwrite the oldest buffered rows; the
+        overwritten count is the batch's ``dropped`` (backpressure is
+        drop-oldest, never blocking the producer).
+        """
+        if set(rows) != set(self.fields):
+            raise StreamException(
+                f"stream {self.name!r} fields {self.fields} != "
+                f"appended fields {tuple(rows)}")
+        cols = {f: np.asarray(rows[f], np.float64).reshape(-1)
+                for f in self.fields}
+        n = cols[self.fields[0]].shape[0]
+        if any(v.shape[0] != n for v in cols.values()):
+            raise StreamException("ragged append batch")
+        with self._lock:
+            dropped = max(0, self._count + n - self.capacity)
+            for f in self.fields:
+                src = cols[f][-self.capacity:]        # keep only the tail
+                m = src.shape[0]
+                end = self._next + m
+                if end <= self.capacity:
+                    self._cols[f][self._next:end] = src
+                else:
+                    first = self.capacity - self._next
+                    self._cols[f][self._next:] = src[:first]
+                    self._cols[f][:end % self.capacity] = src[first:]
+            self._next = (self._next + min(n, self.capacity)) % self.capacity
+            self._count = min(self.capacity, self._count + n)
+            self.total_appended += n
+            self.total_dropped += dropped
+            self._append_times.append((time.monotonic(), n))
+            return {"appended": n, "dropped": dropped,
+                    "rows": self._count}
+
+    # -- views ----------------------------------------------------------------
+    def _ordered(self, field: str) -> np.ndarray:
+        """Buffered values oldest-first (caller holds the lock)."""
+        start = (self._next - self._count) % self.capacity
+        idx = (start + np.arange(self._count)) % self.capacity
+        return self._cols[field][idx]
+
+    def snapshot(self) -> dm.Table:
+        with self._lock:
+            first_seq = self.total_appended - self._count
+            cols = {"seq": jnp.asarray(
+                first_seq + np.arange(self._count))}
+            for f in self.fields:
+                cols[f] = jnp.asarray(self._ordered(f))
+            return dm.Table(cols)
+
+    def window(self, size: int,
+               slide: Optional[int] = None) -> dm.ArrayObject:
+        """Tumbling (``slide`` is None) or sliding window view."""
+        assert size > 0
+        with self._lock:
+            first_seq = self.total_appended - self._count
+            if slide is None:
+                # most recent complete seq-aligned tumbling window
+                k = self.total_appended // size - 1
+                if k < 0:
+                    raise StreamException(
+                        f"stream {self.name!r}: no complete window of "
+                        f"size {size} yet ({self.total_appended} rows)")
+                s = k * size
+                if s < first_seq:
+                    raise StreamException(
+                        f"stream {self.name!r}: window [{s},{s + size}) "
+                        f"already evicted (buffer starts at {first_seq})")
+                off = s - first_seq
+                attrs = {f: jnp.asarray(self._ordered(f)[off:off + size])
+                         for f in self.fields}
+                return dm.ArrayObject(attrs, ("tick",))
+            assert slide > 0
+            if self._count < size:
+                raise StreamException(
+                    f"stream {self.name!r}: {self._count} rows < window "
+                    f"size {size}")
+            starts = np.arange(0, self._count - size + 1, slide)
+            attrs = {}
+            for f in self.fields:
+                buf = self._ordered(f)
+                attrs[f] = jnp.asarray(
+                    np.stack([buf[s:s + size] for s in starts]))
+            return dm.ArrayObject(attrs, ("window", "tick"))
+
+    def rate(self) -> float:
+        """Recent ingest rate in rows/second (0.0 with <2 appends)."""
+        with self._lock:
+            if len(self._append_times) < 2:
+                return 0.0
+            t0, _ = self._append_times[0]
+            t1, _ = self._append_times[-1]
+            if t1 <= t0:
+                return 0.0
+            rows = sum(n for _, n in list(self._append_times)[1:])
+            return rows / (t1 - t0)
+
+    # -- island data-model plumbing ------------------------------------------
+    @property
+    def num_rows(self) -> int:
+        with self._lock:
+            return self._count
+
+    def nbytes(self) -> int:
+        return int(sum(v.nbytes for v in self._cols.values()))
+
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            return {"rows": self._count, "capacity": self.capacity,
+                    "appended": self.total_appended,
+                    "dropped": self.total_dropped}
+
+
+class StreamEngine(Engine):
+    """S-Store analog: holds named ``Stream`` objects for the streaming
+    island.  Materialized window views (plain Tables/ArrayObjects) pass
+    through the inherited binary/staged import/export paths, so the
+    Migrator can cast them into the other islands unchanged."""
+    kind = "stream_store"
+    islands = ("streaming",)
+
+    def create_stream(self, name: str, fields: Sequence[str],
+                      capacity: int = 4096) -> Stream:
+        stream = Stream(name, fields, capacity)
+        self.put(name, stream)
+        return stream
+
+    def streams(self) -> Dict[str, Stream]:
+        return {n: o for n, o in self._objects.items()
+                if isinstance(o, Stream)}
+
+
+ENGINE_KINDS["stream_store"] = StreamEngine

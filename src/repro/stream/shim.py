@@ -1,0 +1,134 @@
+"""Streaming island shim (paper §III: one shim per island/engine pair).
+
+The island language is functional, AFL-flavoured, over ``Stream`` objects
+stored on a ``StreamEngine``:
+
+  snapshot(S)                    -> dm.Table   (all buffered rows + seq)
+  window(S, size)                -> dm.ArrayObject, dims ("tick",)
+                                    (latest complete tumbling window)
+  window(S, size, slide)         -> dm.ArrayObject, dims ("window","tick")
+  aggregate(<expr>, fn(attr))    -> dm.ArrayObject (fn: count/sum/avg/
+                                    min/max over a window expression)
+  rate(S)                        -> dm.Table   (rows_per_second + counters)
+  append(S, '<json rows>')       -> dm.Table   (appended/dropped counts)
+
+A bare stream name evaluates to its snapshot.  Window views are ordinary
+island data-model objects, so ``bdcast`` moves them into the array island
+(binary route) or the relational island (staged route) unchanged.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.core import datamodel as dm
+from repro.core.engines import Engine
+from repro.stream.engine import Stream, StreamException
+
+_AGG_RE = re.compile(r"^(count|sum|avg|min|max)\(\s*(\*|[\w\.]+)\s*\)$",
+                     re.IGNORECASE)
+
+
+def _balanced(s: str):
+    depth = 0
+    for j, ch in enumerate(s):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return s[1:j], j + 1
+    raise ValueError(f"unbalanced streaming query: {s!r}")
+
+
+def _split_args(s: str) -> List[str]:
+    parts, depth, quote, cur = [], 0, None, []
+    for ch in s:
+        if quote:
+            cur.append(ch)
+            if ch == quote:
+                quote = None
+            continue
+        if ch in ("'", '"'):
+            quote = ch
+            cur.append(ch)
+            continue
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur).strip())
+    return parts
+
+
+def _get_stream(engine: Engine, name: str) -> Stream:
+    obj = engine.get(name.strip())
+    if not isinstance(obj, Stream):
+        raise StreamException(f"{name!r} is not a stream on {engine.name}")
+    return obj
+
+
+def execute_stream(engine: Engine, query: str):
+    """Evaluate one streaming-island expression against ``engine``."""
+    q = query.strip()
+    m = re.match(r"^(\w+)\s*\(", q)
+    if not m:
+        # bare stream name -> snapshot (the natural "scan" of a stream)
+        return _get_stream(engine, q).snapshot()
+    fn = m.group(1).lower()
+    body, _ = _balanced(q[m.end() - 1:])
+    args = _split_args(body)
+
+    if fn == "snapshot":
+        return _get_stream(engine, args[0]).snapshot()
+    if fn == "window":
+        if len(args) not in (2, 3):
+            raise ValueError(f"window needs (stream, size[, slide]): {q!r}")
+        stream = _get_stream(engine, args[0])
+        size = int(args[1])
+        slide = int(args[2]) if len(args) == 3 else None
+        return stream.window(size, slide)
+    if fn == "rate":
+        stream = _get_stream(engine, args[0])
+        stats = stream.stats()
+        return dm.Table({
+            "rows_per_second": jnp.asarray([stream.rate()]),
+            "rows": jnp.asarray([float(stats["rows"])]),
+            "appended": jnp.asarray([float(stats["appended"])]),
+            "dropped": jnp.asarray([float(stats["dropped"])])})
+    if fn == "aggregate":
+        if len(args) != 2:
+            raise ValueError(f"aggregate needs (expr, fn(attr)): {q!r}")
+        value = execute_stream(engine, args[0])
+        agg = _AGG_RE.match(args[1].strip())
+        if not agg:
+            raise ValueError(f"bad streaming aggregate: {args[1]!r}")
+        if isinstance(value, dm.Table):
+            value = dm.ArrayObject(
+                {n: v for n, v in value.columns.items() if n != "seq"},
+                ("tick",))
+        target = agg.group(2)
+        if target == "*":
+            target = next(iter(value.attrs))
+        return value.aggregate(agg.group(1).lower(), target)
+    if fn == "append":
+        if len(args) != 2:
+            raise ValueError(f"append needs (stream, '<json rows>'): {q!r}")
+        stream = _get_stream(engine, args[0])
+        payload = json.loads(args[1].strip().strip("'\""))
+        if isinstance(payload, dict):
+            payload = [payload]
+        cols = {f: [row[f] for row in payload] for f in stream.fields}
+        counts = stream.append(cols)
+        return dm.Table({k: jnp.asarray([float(v)])
+                         for k, v in counts.items()})
+    raise ValueError(f"unsupported streaming operator: {fn}")

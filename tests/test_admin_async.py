@@ -23,7 +23,9 @@ def test_admin_status_reports_engines_and_objects():
     assert st["engines"]["hoststore0"]["bytes"] > 0
     assert "relational" in st["islands"]
     assert "densehbm0" in st["islands"]["array"]
-    assert st["catalog"]["engines"] == 5
+    # v0.1 topology's 5 engines + the PR-2 streaming island's streamstore0
+    assert st["catalog"]["engines"] == 6
+    assert "streaming" in st["islands"]
     assert st["catalog"]["objects"] >= 5
 
 

@@ -1,0 +1,111 @@
+"""Dedicated PlanCache staleness tests (paper §V.E / ROADMAP PR-1 knobs):
+each eviction path — TTL expiry, monitor-version bump with best-QEP
+mismatch, and the background ``evict_stale()`` sweep — gets its own unit
+test, plus the keep-paths (version bump *without* a better QEP, and
+``refresh_version`` after a hit's own measurement)."""
+import time
+
+from repro.core import bql, signatures
+from repro.core.executor import QueryExecutionPlan, assign_ids
+from repro.core.monitor import Monitor
+from repro.core.planner import PlanCache
+
+
+def _sig_and_plan(query: str, engine: str = "hoststore0"):
+    root = bql.parse(query)
+    sig = signatures.of_query(root)
+    nodes, casts = assign_ids(root)
+    plan = QueryExecutionPlan(
+        root=root, node_engines={nid: engine for nid in nodes},
+        cast_methods={cid: "binary" for cid in casts})
+    return sig, plan
+
+
+def test_ttl_expiry_evicts_on_get():
+    cache = PlanCache(Monitor(), max_size=8, max_age_seconds=0.005)
+    sig, plan = _sig_and_plan("bdrel(select a from db.t)")
+    cache.put(sig, plan)
+    assert cache.get(sig) is not None              # fresh: still cached
+    time.sleep(0.01)
+    assert cache.get(sig) is None                  # aged out
+    stats = cache.stats()
+    assert stats["stale_evictions"] == 1
+    assert stats["size"] == 0
+
+
+def test_version_bump_with_best_qep_mismatch_evicts():
+    monitor = Monitor()
+    cache = PlanCache(monitor, max_size=8, max_age_seconds=100.0)
+    sig, plan = _sig_and_plan("bdrel(select a from db.t)")
+    monitor.add_measurement(sig, plan.qep_id, 0.5)
+    cache.put(sig, plan)
+    # new measurements land AND the Monitor's best QEP moved elsewhere
+    monitor.add_measurement(sig, "engines[0:hoststore1]|casts[]", 1e-4)
+    assert cache.get(sig) is None
+    assert cache.stats()["stale_evictions"] == 1
+
+
+def test_version_bump_without_better_qep_keeps_entry():
+    monitor = Monitor()
+    cache = PlanCache(monitor, max_size=8, max_age_seconds=100.0)
+    sig, plan = _sig_and_plan("bdrel(select a from db.t)")
+    monitor.add_measurement(sig, plan.qep_id, 0.5)
+    cache.put(sig, plan)
+    # new measurement for the SAME plan: version bumps, best unchanged
+    monitor.add_measurement(sig, plan.qep_id, 0.4)
+    entry = cache.get(sig)
+    assert entry is not None and entry.qep_id == plan.qep_id
+    # the entry resynced its stored version, so the next get is a plain
+    # hit without a best_qep rescan
+    assert entry.monitor_version == monitor.signature_version(sig)
+    assert cache.stats()["stale_evictions"] == 0
+
+
+def test_refresh_version_after_hit_measurement():
+    monitor = Monitor()
+    cache = PlanCache(monitor, max_size=8, max_age_seconds=100.0)
+    sig, plan = _sig_and_plan("bdrel(select a from db.t)")
+    cache.put(sig, plan)
+    # the lean-mode hit path records its own measurement then resyncs
+    monitor.add_measurement(sig, plan.qep_id, 0.01)
+    cache.refresh_version(sig)
+    entry = cache._entries[sig.key()][1]
+    assert entry.monitor_version == monitor.signature_version(sig)
+    assert cache.get(sig) is not None
+
+
+def test_evict_stale_sweep_drops_aged_and_superseded():
+    monitor = Monitor()
+    cache = PlanCache(monitor, max_size=8, max_age_seconds=100.0)
+    sig_keep, plan_keep = _sig_and_plan("bdrel(select a from db.t)")
+    sig_aged, plan_aged = _sig_and_plan("bdrel(select b from db.u)")
+    sig_sup, plan_sup = _sig_and_plan("bdrel(select c from db.v)")
+    cache.put(sig_keep, plan_keep)
+    cache.put(sig_aged, plan_aged)
+    cache.put(sig_sup, plan_sup)
+    # the kept entry is the Monitor's own best plan for its signature
+    # (without a record, best_qep's closest-signature fallback would
+    # report the superseding plan and sweep this entry too)
+    monitor.add_measurement(sig_keep, plan_keep.qep_id, 0.01)
+    # age one entry artificially; supersede another via the Monitor
+    cache._entries[sig_aged.key()][1].inserted_at -= 1000.0
+    monitor.add_measurement(sig_sup, "engines[0:other]|casts[]", 1e-6)
+    assert cache.evict_stale() == 2
+    assert len(cache) == 1
+    assert cache.get(sig_keep) is not None
+    assert cache.stats()["stale_evictions"] == 2
+
+
+def test_lru_eviction_is_separate_from_staleness():
+    cache = PlanCache(Monitor(), max_size=2, max_age_seconds=100.0)
+    pairs = [_sig_and_plan(q) for q in (
+        "bdrel(select a from db.t)",
+        "bdrel(select b from db.u)",
+        "bdrel(select c from db.v)")]
+    for sig, plan in pairs:
+        cache.put(sig, plan)
+    assert len(cache) == 2
+    assert cache.get(pairs[0][0]) is None          # LRU-dropped
+    stats = cache.stats()
+    assert stats["evictions"] == 1                 # capacity, not stale
+    assert stats["stale_evictions"] == 0

@@ -1,0 +1,363 @@
+"""Streaming island tests (paper §III; arXiv:1609.07548 S-Store member):
+ring-buffer semantics, window views, island ops through the Query
+Endpoint, cast routes into the array/relational islands, the
+continuous-query runtime (incl. the acceptance criterion: >=20 ticks,
+bit-identical to batch, 2nd+ ticks hitting the plan cache), bounded
+engine op logs, and the Monitor cost-model early cancel."""
+import numpy as np
+import pytest
+
+from repro.core import admin, bql, islands, signatures
+from repro.core.api import default_deployment
+from repro.data.mimic import load_mimic_demo, stream_mimic_waveforms
+from repro.stream.engine import Stream, StreamEngine, StreamException
+
+WINDOW_CQ = ("bdarray(aggregate(bdcast(bdstream(window("
+             "mimic2v26.waveform_stream, 32)), w_arr,"
+             " '<signal:double>[tick=0:31,32,0]', array), avg(signal)))")
+
+
+# -- ring buffer --------------------------------------------------------------
+def test_stream_append_and_snapshot_order():
+    s = Stream("s", ("x",), capacity=8)
+    s.append({"x": [1.0, 2.0, 3.0]})
+    s.append({"x": [4.0, 5.0]})
+    snap = s.snapshot()
+    np.testing.assert_array_equal(np.asarray(snap.columns["x"]),
+                                  [1, 2, 3, 4, 5])
+    np.testing.assert_array_equal(np.asarray(snap.columns["seq"]),
+                                  [0, 1, 2, 3, 4])
+
+
+def test_stream_ring_overflow_drops_oldest():
+    s = Stream("s", ("x",), capacity=4)
+    s.append({"x": [0.0, 1.0, 2.0]})
+    s.append({"x": [3.0, 4.0, 5.0]})          # overwrites seq 0,1
+    assert s.total_appended == 6 and s.total_dropped == 2
+    snap = s.snapshot()
+    np.testing.assert_array_equal(np.asarray(snap.columns["x"]),
+                                  [2, 3, 4, 5])
+    np.testing.assert_array_equal(np.asarray(snap.columns["seq"]),
+                                  [2, 3, 4, 5])
+
+
+def test_stream_batch_larger_than_capacity_keeps_tail():
+    s = Stream("s", ("x",), capacity=4)
+    s.append({"x": [1.0]})
+    s.append({"x": list(range(10))})
+    assert s.total_dropped == 7               # 1 buffered + 6 of the batch
+    np.testing.assert_array_equal(
+        np.asarray(s.snapshot().columns["x"]), [6, 7, 8, 9])
+
+
+def test_stream_field_mismatch_raises():
+    s = Stream("s", ("x", "y"), capacity=4)
+    with pytest.raises(StreamException):
+        s.append({"x": [1.0]})
+    with pytest.raises(StreamException):
+        s.append({"x": [1.0], "y": [1.0, 2.0]})   # ragged
+
+
+# -- windows ------------------------------------------------------------------
+def test_tumbling_window_is_seq_aligned():
+    s = Stream("s", ("x",), capacity=64)
+    s.append({"x": np.arange(10, dtype=float)})
+    w = s.window(4)                     # windows [0,4),[4,8); last = [4,8)
+    assert w.dim_names == ("tick",)
+    np.testing.assert_array_equal(np.asarray(w.attrs["x"]), [4, 5, 6, 7])
+    s.append({"x": np.arange(10, 14, dtype=float)})
+    np.testing.assert_array_equal(                 # now [8,12) is complete
+        np.asarray(s.window(4).attrs["x"]), [8, 9, 10, 11])
+
+
+def test_tumbling_window_unavailable_raises():
+    s = Stream("s", ("x",), capacity=8)
+    s.append({"x": [1.0, 2.0]})
+    with pytest.raises(StreamException):
+        s.window(4)                     # no complete window yet
+    s2 = Stream("s2", ("x",), capacity=4)
+    s2.append({"x": np.arange(16, dtype=float)})
+    with pytest.raises(StreamException):
+        s2.window(8)                    # complete but already evicted
+
+
+def test_sliding_window_stacks():
+    s = Stream("s", ("x",), capacity=16)
+    s.append({"x": np.arange(8, dtype=float)})
+    w = s.window(4, 2)
+    assert w.dim_names == ("window", "tick")
+    np.testing.assert_array_equal(
+        np.asarray(w.attrs["x"]),
+        [[0, 1, 2, 3], [2, 3, 4, 5], [4, 5, 6, 7]])
+
+
+# -- island ops through the Query Endpoint ------------------------------------
+@pytest.fixture()
+def bd():
+    bd = default_deployment()
+    load_mimic_demo(bd, num_patients=16, num_orders=32, wave_len=128,
+                    num_logs=8)
+    return bd
+
+
+def test_streaming_island_registered(bd):
+    assert "streaming" in islands.ISLANDS
+    eng = bd.catalog.engines_for_island("streaming")
+    assert [e.name for e in eng] == ["streamstore0"]
+    assert isinstance(bd.engines["streamstore0"], StreamEngine)
+
+
+def test_streaming_ops_via_bql(bd):
+    bd.register_stream("streamstore0", "vitals.stream", ("hr",),
+                       capacity=64)
+    r = bd.query("bdstream(append(vitals.stream,"
+                 " '[{\"hr\": 60.0}, {\"hr\": 80.0}]'))")
+    assert float(r.value.columns["appended"][0]) == 2.0
+    snap = bd.query("bdstream(snapshot(vitals.stream))").value
+    assert islands.validate_result("streaming", snap)
+    np.testing.assert_array_equal(np.asarray(snap.columns["hr"]), [60, 80])
+    agg = bd.query("bdstream(aggregate(window(vitals.stream, 2),"
+                   " avg(hr)))").value
+    assert islands.validate_result("streaming", agg)
+    assert float(agg.attrs["avg_hr"][0]) == pytest.approx(70.0)
+    rate = bd.query("bdstream(rate(vitals.stream))").value
+    assert float(rate.columns["appended"][0]) == 2.0
+
+
+def test_window_casts_binary_to_array_and_staged_to_table(bd):
+    stream = bd.register_stream("streamstore0", "vitals.stream",
+                                ("hr",), capacity=64)
+    stream.append({"hr": np.arange(8, dtype=float)})
+    r = bd.query("bdarray(aggregate(bdcast(bdstream(window("
+                 "vitals.stream, 8)), w_arr,"
+                 " '<hr:double>[tick=0:7,8,0]', array), max(hr)))")
+    assert float(r.value.attrs["max_hr"][0]) == 7.0
+    # staged route: the window's dims become relational columns
+    r = bd.query("bdrel(select tick, hr from bdcast(bdstream(window("
+                 "vitals.stream, 8)), w_tbl, '', relational)"
+                 " where hr >= 6)")
+    np.testing.assert_array_equal(np.asarray(r.value.columns["hr"]),
+                                  [6, 7])
+    np.testing.assert_array_equal(np.asarray(r.value.columns["tick"]),
+                                  [6, 7])
+
+
+# -- continuous queries -------------------------------------------------------
+def test_continuous_query_cadence_and_registration(bd):
+    cq2 = bd.register_continuous("bdstream(rate(mimic2v26."
+                                 "waveform_stream))", every_n_ticks=3)
+    with pytest.raises(ValueError):
+        bd.register_continuous("not bql at all")
+    with pytest.raises(ValueError):
+        bd.register_continuous("bdstream(rate(x))", name=cq2.name)
+    bd.register_stream("streamstore0", "mimic2v26.waveform_stream",
+                       ("signal", "hr"), capacity=64)
+    bd.engines["streamstore0"].get("mimic2v26.waveform_stream").append(
+        {"signal": [0.5], "hr": [70.0]})
+    for _ in range(7):
+        bd.streams.tick()
+    assert bd.streams.ticks == 7
+    assert cq2.executions == 2                 # ticks 3 and 6
+
+
+def test_continuous_query_acceptance_20_ticks(bd):
+    """Acceptance criterion: a standing query over the MIMIC waveform
+    stream runs >= 20 ticks bit-identical to the same BQL re-run as a
+    batch query on the snapshot, with 2nd+ ticks hitting the plan cache
+    (verified via the cache hit counter in admin.status())."""
+    cq = bd.register_continuous(WINDOW_CQ, every_n_ticks=1,
+                                name="wave_avg")
+    hits_before = admin.status(bd)["plan_cache"]["hits"]
+    ticks = 0
+    for info in stream_mimic_waveforms(bd, batch_rows=32, num_batches=22,
+                                       capacity=2048):
+        ticks += 1
+        assert info["ran"][0][0] == "wave_avg"
+        # batch re-run of the identical BQL on the current snapshot
+        batch = bd.query(WINDOW_CQ)
+        np.testing.assert_array_equal(
+            np.asarray(cq.last_value.attrs["avg_signal"]),
+            np.asarray(batch.value.attrs["avg_signal"]))
+    assert ticks >= 20 and cq.executions == ticks
+    assert cq.cache_hits == cq.executions - 1      # all 2nd+ ticks hit
+    status = admin.status(bd)
+    assert status["plan_cache"]["hits"] - hits_before \
+        >= 2 * ticks - 1                           # CQ ticks + batch runs
+    # metrics surfaced through the admin streams section + Monitor
+    m = status["streams"]["queries"]["wave_avg"]
+    assert m["executions"] == ticks
+    assert m["cache_hits"] == ticks - 1
+    assert "wave_avg" in status["streams"]["monitor_ewma_ms"]
+    assert status["streams"]["streams"][
+        "mimic2v26.waveform_stream"]["appended"] == 32 * ticks
+
+
+def test_tick_isolates_failing_queries(bd):
+    """A standing query whose window isn't complete yet must not crash
+    the tick, the feed loop, or the other standing queries."""
+    bd.register_stream("streamstore0", "vitals.stream", ("hr",),
+                       capacity=256)
+    stream = bd.engines["streamstore0"].get("vitals.stream")
+    big = bd.register_continuous(
+        "bdstream(aggregate(window(vitals.stream, 128), avg(hr)))",
+        name="big_window")
+    ok = bd.register_continuous("bdstream(snapshot(vitals.stream))",
+                                name="snap")
+    stream.append({"hr": np.arange(64, dtype=float)})
+    ran = bd.streams.tick()                    # big_window fails, snap runs
+    assert [n for n, _ in ran] == ["snap"]
+    assert big.errors == 1 and big.executions == 0
+    assert "no complete window" in big.last_error
+    assert ok.executions == 1
+    stream.append({"hr": np.arange(64, dtype=float)})
+    bd.streams.tick()                          # 128 rows: both succeed now
+    assert big.errors == 1 and big.executions == 1
+    assert bd.streams.status()["queries"]["big_window"]["errors"] == 1
+
+
+def test_transient_stream_error_keeps_cached_plan(bd):
+    """An evicted tumbling window raises without evicting the cached
+    plan — the next healthy tick is still a plan-cache hit."""
+    from repro.core.executor import LocalQueryExecutionException
+    bd.register_stream("streamstore0", "ring.stream", ("x",), capacity=16)
+    stream = bd.engines["streamstore0"].get("ring.stream")
+    q = "bdstream(aggregate(window(ring.stream, 16), sum(x)))"
+    stream.append({"x": np.arange(16, dtype=float)})
+    assert not bd.query(q).plan_cache_hit          # miss: plan now cached
+    stream.append({"x": np.arange(8, dtype=float)})
+    # window [0,16) is the latest complete one but its head was evicted
+    with pytest.raises(LocalQueryExecutionException):
+        bd.query(q)
+    stream.append({"x": np.arange(8, dtype=float)})    # [16,32) complete
+    r = bd.query(q)
+    assert r.plan_cache_hit                        # plan survived the error
+
+
+def test_drops_charged_only_to_streams_the_query_reads(bd):
+    bd.register_stream("streamstore0", "stable.stream", ("x",),
+                       capacity=64)
+    bd.register_stream("streamstore0", "lossy.stream", ("x",), capacity=4)
+    cq = bd.register_continuous("bdstream(snapshot(stable.stream))",
+                                name="stable_snap")
+    bd.engines["streamstore0"].get("stable.stream").append(
+        {"x": [1.0, 2.0]})
+    bd.engines["streamstore0"].get("lossy.stream").append(
+        {"x": np.arange(20, dtype=float)})         # drops 16 on lossy
+    bd.streams.tick()
+    assert cq.executions == 1
+    assert cq.drops_seen == 0                      # lossy's loss isn't ours
+
+
+def test_continuous_query_counts_drops_between_executions(bd):
+    bd.register_stream("streamstore0", "tiny.stream", ("x",), capacity=4)
+    stream = bd.engines["streamstore0"].get("tiny.stream")
+    cq = bd.register_continuous("bdstream(snapshot(tiny.stream))",
+                                every_n_ticks=2, name="snap")
+    stream.append({"x": np.arange(6, dtype=float)})    # drops 2
+    bd.streams.tick()                                  # not due
+    bd.streams.tick()                                  # due: sees 2 drops
+    assert cq.executions == 1 and cq.drops_seen == 2
+    stream.append({"x": np.arange(4, dtype=float)})    # drops 4 more
+    bd.streams.tick()
+    bd.streams.tick()
+    assert cq.drops_seen == 6
+
+
+# -- signatures ---------------------------------------------------------------
+def test_streaming_signature_counts_ops():
+    sig = signatures.of_query(bql.parse(WINDOW_CQ))
+    ops = dict(sig.ops)
+    assert ops.get("window") == 1 and ops.get("aggregate") == 1
+    assert "mimic2v26.waveform_stream" in sig.objects
+    assert sig.num_casts == 1
+    assert sorted(sig.islands) == ["array", "streaming"]
+
+
+# -- bounded op logs (satellite) ----------------------------------------------
+def test_op_log_is_bounded_and_resettable():
+    from repro.core.engines import HostStoreEngine
+    eng = HostStoreEngine("h")
+    n = eng.OP_LOG_LIMIT + 1000
+    for i in range(n):
+        eng.record("op", float(i))
+    assert len(eng.op_log) == eng.OP_LOG_LIMIT     # bounded ring buffer
+    assert eng.ops_recorded == n                   # lifetime count intact
+    assert eng.recent_ops(3) == [("op", float(i))
+                                 for i in (n - 3, n - 2, n - 1)]
+    assert eng.reset_op_log() == eng.OP_LOG_LIMIT
+    assert len(eng.op_log) == 0 and eng.ops_recorded == n
+
+
+def test_monitoring_refresh_reads_bounded_log(bd):
+    task = bd.start_monitoring(interval_seconds=1e9)
+    bd.engines["hoststore0"].record("x", 0.01)
+    task.tick()                                # must not raise on deques
+    assert bd.monitor.engine_ewma.get("hoststore0") is not None
+
+
+# -- cost-model early cancel (satellite) --------------------------------------
+def _training_query():
+    # poe_order lives on both hoststore0 and hoststore1 -> >= 2 plans
+    return ("bdarray(scan(bdcast(bdrel(select poe_id, dose from"
+            " mimic2v26.poe_order), dose_copy,"
+            " '<dose:double>[poe_id=0:*,1000,0]', array)))")
+
+
+def test_cost_model_cancel_skips_known_slow_plans(bd):
+    q = _training_query()
+    root = bql.parse(q)
+    sig = signatures.of_query(root)
+    plans = bd.planner.enumerate_plans(root)
+    assert len(plans) >= 2
+    bd.monitor.add_measurement(sig, plans[0].qep_id, 1e-4)
+    for p in plans[1:]:
+        bd.monitor.add_measurement(sig, p.qep_id, 30.0)
+    before = bd.planner.cost_model_cancels
+    r = bd.query(q, training=True)
+    assert bd.planner.cost_model_cancels - before == len(plans) - 1
+    assert r.qep_id == plans[0].qep_id
+    # cancelled plans never ran: their measurement count is still 1
+    perf = bd.monitor.get_benchmark_performance(sig)
+    for p in plans[1:]:
+        assert len(perf[p.qep_id]) == 1
+    assert admin.status(bd)["concurrency"]["cost_model_cancels"] \
+        == bd.planner.cost_model_cancels
+
+
+def test_cost_model_cancel_reprobes_after_streak(bd):
+    """A stale estimate must not blacklist a QEP forever: after
+    ``cost_cancel_reprobe`` consecutive cancels the plan runs once and
+    refreshes its Monitor estimate."""
+    q = _training_query()
+    root = bql.parse(q)
+    sig = signatures.of_query(root)
+    plans = bd.planner.enumerate_plans(root)
+    assert len(plans) >= 2
+    bd.monitor.add_measurement(sig, plans[0].qep_id, 1e-4)
+    slow = plans[1]
+    bd.monitor.add_measurement(sig, slow.qep_id, 30.0)
+    reprobe = bd.planner.config.cost_cancel_reprobe
+    for _ in range(reprobe):               # cancelled on each of these
+        bd.monitor.engine_ewma.clear()     # keep enumeration stable
+        bd.query(q, training=True)
+        assert len(bd.monitor.get_benchmark_performance(sig)
+                   [slow.qep_id]) == 1
+    bd.monitor.engine_ewma.clear()
+    bd.query(q, training=True)             # streak exceeded: re-probed
+    assert len(bd.monitor.get_benchmark_performance(sig)
+               [slow.qep_id]) == 2
+
+
+def test_cost_model_cancel_spares_unestimated_plans(bd):
+    q = _training_query().replace("dose_copy", "dose_copy2")
+    root = bql.parse(q)
+    sig = signatures.of_query(root)
+    plans = bd.planner.enumerate_plans(root)
+    assert len(plans) >= 2
+    # only one plan has history: the rest must still run (exploration)
+    bd.monitor.add_measurement(sig, plans[0].qep_id, 1e-4)
+    before = bd.planner.cost_model_cancels
+    bd.query(q, training=True)
+    assert bd.planner.cost_model_cancels == before
+    perf = bd.monitor.get_benchmark_performance(sig)
+    assert sum(1 for v in perf.values() if v) >= 2
