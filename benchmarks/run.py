@@ -28,7 +28,7 @@ def main() -> None:
     selected = args.only.split(",") if args.only else list(SUITES)
 
     print("name,us_per_call,derived")
-    report = {"suites": {}, "failures": []}
+    report = {"suites": {}, "meta": {}, "failures": []}
     for name in selected:
         try:
             if name == "fig5":
@@ -49,6 +49,9 @@ def main() -> None:
             elif name == "stream":
                 from benchmarks import stream_bench
                 rows = stream_bench.run()
+                # shard/engine config rides along so BENCH_*.json
+                # trajectories stay comparable across shard configs
+                report["meta"]["stream"] = dict(stream_bench.LAST_META)
             elif name == "roofline":
                 from benchmarks import roofline
                 rows = roofline.run()

@@ -1,12 +1,17 @@
 """Streaming island benchmarks (paper §III / arXiv:1609.07548 S-Store):
-ingest throughput into the ring buffer, standing-query tick latency vs
-window size (2nd+ ticks ride the signature plan cache), and the staged
-window->table route.  Rows land in ``benchmarks.run --json`` so CI's
-bench-smoke artifact records ingest rows/sec and per-tick latency."""
+ingest throughput into the ring buffer (single stream vs hash-partitioned
+shards across multiple StreamEngines), gathered-window bit-identity vs
+the unsharded baseline, the rolling window-aggregate fast path, standing-
+query tick latency vs window size (2nd+ ticks ride the signature plan
+cache), and the staged window->table route.  Rows land in
+``benchmarks.run --json`` so CI's bench-smoke artifact records ingest
+rows/sec and per-tick latency; the shard/engine configuration is exported
+via ``LAST_META`` so BENCH_*.json trajectories stay comparable across
+shard configs."""
 from __future__ import annotations
 
 import time
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -14,11 +19,40 @@ from repro.core.api import default_deployment
 
 STREAM = "mimic2v26.waveform_stream"
 
+# sharded-ingest configuration (also recorded in the --json metadata)
+INGEST_SHARDS = 4
+INGEST_BATCH_ROWS = 65536
+INGEST_BATCHES = 24
+
+# set by run(): {"shards", "stream_engines", "batch_rows", ...} — read by
+# benchmarks.run to stamp the JSON report's stream-suite metadata
+LAST_META: Dict[str, object] = {}
+
 
 def _window_query(size: int) -> str:
     return (f"bdarray(aggregate(bdcast(bdstream(window({STREAM}, {size})),"
             f" w_arr, '<signal:double>[tick=0:{size - 1},{size},0]',"
             f" array), avg(signal)))")
+
+
+def _sharded_ingest_rate(shards: int, batches: List[Dict[str, np.ndarray]],
+                         batch_rows: int) -> float:
+    """Rows/second appended through the logical stream at a given shard
+    count (1 = plain Stream; >1 = scatter across StreamEngines with the
+    per-shard ring writes fanned out in parallel)."""
+    bd = default_deployment()
+    stream = bd.register_stream(
+        "streamstore0", STREAM, ("signal", "hr"),
+        capacity=8 * batch_rows, shards=shards, num_engines=shards,
+        block_rows=max(1, batch_rows // max(1, shards)))
+    stream.append(batches[0])                    # warm the ring / pool
+    t0 = time.perf_counter()
+    for batch in batches:
+        stream.append(batch)
+    dt = time.perf_counter() - t0
+    if shards > 1:
+        stream.close()
+    return batch_rows * len(batches) / dt
 
 
 def run(batch_rows: int = 512, num_batches: int = 16,
@@ -42,6 +76,74 @@ def run(batch_rows: int = 512, num_batches: int = 16,
     rows.append(("stream/ingest", ingest_s / num_batches * 1e6,
                  f"rows_per_sec={total / ingest_s:.0f}_"
                  f"batch_rows={batch_rows}"))
+
+    # -- sharded ingest: scatter across N StreamEngines vs one ring ----------
+    # large batches so the per-shard ring writes (numpy copies, GIL
+    # released) dominate the scatter bookkeeping; the speedup is bounded
+    # by the host's usable cores/memory bandwidth
+    big = [{"signal": rng.standard_normal(INGEST_BATCH_ROWS),
+            "hr": 75.0 + rng.standard_normal(INGEST_BATCH_ROWS)}
+           for _ in range(INGEST_BATCHES)]
+    rate1 = _sharded_ingest_rate(1, big, INGEST_BATCH_ROWS)
+    rate_n = _sharded_ingest_rate(INGEST_SHARDS, big, INGEST_BATCH_ROWS)
+    rows.append((f"stream/ingest_shards{INGEST_SHARDS}",
+                 INGEST_BATCH_ROWS / rate_n * 1e6,     # us per batch
+                 f"rows_per_sec={rate_n:.0f}_speedup_vs_1shard="
+                 f"{rate_n / rate1:.2f}x_1shard_rows_per_sec={rate1:.0f}"))
+
+    # -- gathered window: bit-identical to the unsharded baseline ------------
+    bd_ref = default_deployment()
+    ref = bd_ref.register_stream("streamstore0", STREAM,
+                                 ("signal", "hr"), capacity=8192)
+    bd_sh = default_deployment()
+    sh = bd_sh.register_stream("streamstore0", STREAM, ("signal", "hr"),
+                               capacity=8192, shards=INGEST_SHARDS,
+                               num_engines=INGEST_SHARDS, block_rows=64)
+    for _ in range(8):
+        batch = {"signal": rng.standard_normal(512),
+                 "hr": 75.0 + rng.standard_normal(512)}
+        ref.append(batch)
+        sh.append(batch)
+    sh.window(1024)                       # warm jnp dispatch before timing
+    t0 = time.perf_counter()
+    gathered = sh.window(1024)
+    gather_s = time.perf_counter() - t0
+    identical = bool(np.array_equal(
+        np.asarray(ref.window(1024).attrs["signal"]),
+        np.asarray(gathered.attrs["signal"])))
+    rows.append(("stream/gather_window_w1024", gather_s * 1e6,
+                 f"bit_identical_to_unsharded={identical}_"
+                 f"shards={INGEST_SHARDS}"))
+
+    # -- rolling aggregate fast path: O(1) repeat ticks on a big window ------
+    agg_ts = []
+    for _ in range(ticks_per_window):
+        t0 = time.perf_counter()
+        sh.window_aggregate(2048, "avg", "signal")
+        agg_ts.append(time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    materialized = float(np.asarray(sh.window(2048).attrs["signal"],
+                                    np.float64).mean())
+    full_s = time.perf_counter() - t0
+    assert abs(materialized - sh.window_aggregate(2048, "avg", "signal")) \
+        < 1e-6
+    rows.append(("stream/agg_rolling_w2048",
+                 float(np.median(agg_ts[1:])) * 1e6,
+                 f"first_compute_us={agg_ts[0] * 1e6:.1f}_"
+                 f"materialized_us={full_s * 1e6:.1f}_"
+                 f"cache_hits={sh.agg_cache_hits}"))
+
+    LAST_META.clear()
+    LAST_META.update({
+        "shards": INGEST_SHARDS,
+        "stream_engines": INGEST_SHARDS,
+        "ingest_batch_rows": INGEST_BATCH_ROWS,
+        "ingest_batches": INGEST_BATCHES,
+        "sharded_ingest_rows_per_sec": round(rate_n),
+        "unsharded_ingest_rows_per_sec": round(rate1),
+        "sharded_speedup": round(rate_n / rate1, 3),
+        "gather_bit_identical": identical,
+    })
 
     # -- standing-query tick latency vs window size --------------------------
     # fresh deployment per window size so each plan-cache line is clean

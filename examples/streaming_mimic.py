@@ -12,6 +12,10 @@ by batch; two standing BQL queries re-execute as data lands —
 The first tick of each query populates the signature plan cache; every
 later tick skips plan enumeration (watch the cache_hits counter climb).
 
+A second deployment then shards the same stream across two StreamEngines
+(scatter appends, seq-ordered gathers — bit-identical results) and
+live-migrates a shard between engines mid-standing-query.
+
   PYTHONPATH=src python examples/streaming_mimic.py
 """
 import json
@@ -55,6 +59,39 @@ def main() -> None:
 
     print("\n-- plan cache --")
     print(json.dumps(admin.status(bd)["plan_cache"], indent=1))
+
+    # -- sharded scale-out: same stream, 4 shards over 2 StreamEngines ----
+    print("\n-- sharded streaming (4 shards / 2 engines) --")
+    bds = default_deployment()
+    # prime the stream with one complete 64-window before registering
+    # the standing query, so every tick below has a window to aggregate
+    for info in stream_mimic_waveforms(bds, batch_rows=32, num_batches=2,
+                                       capacity=1024, shards=4,
+                                       num_engines=2):
+        pass
+    # pure-streaming aggregate: takes the rolling fast path (per-shard
+    # partials + per-window memo).  Batches are half a window, so every
+    # other tick re-reads the same window index — a memo hit.
+    bds.register_continuous(
+        "bdstream(aggregate(window(mimic2v26.waveform_stream, 64),"
+        " avg(signal)))", every_n_ticks=1, name="wave_avg")
+    for info in stream_mimic_waveforms(bds, batch_rows=32,
+                                       num_batches=22, capacity=1024):
+        pass
+    sharded = bds.engines["streamstore0"].get("mimic2v26.waveform_stream")
+    print("   shard placement:", sharded.shard_engines())
+    agg_total = sharded.agg_computes + sharded.agg_cache_hits
+    print(f"   rolling-agg cache hits: {sharded.agg_cache_hits}"
+          f"/{agg_total}")
+    move = bds.rebalance_stream("mimic2v26.waveform_stream", shard=0,
+                                to_engine="streamstore1")
+    print("   live shard move:", move)
+    for info in stream_mimic_waveforms(bds, batch_rows=64, num_batches=4,
+                                       capacity=1024):
+        pass
+    cq = bds.streams.queries["wave_avg"]
+    print(f"   standing query after move: {cq.executions} executions,"
+          f" {cq.errors} errors (continuity preserved)")
 
 
 if __name__ == "__main__":

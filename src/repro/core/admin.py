@@ -2,7 +2,10 @@
 of a BigDAWG setup.  Programmatic API + a small CLI:
 
   PYTHONPATH=src python -m repro.core.admin status
-  PYTHONPATH=src python -m repro.core.admin streams   # live streaming demo
+  PYTHONPATH=src python -m repro.core.admin streams    # live streaming demo
+  PYTHONPATH=src python -m repro.core.admin rebalance  # shard-move demo
+
+See docs/OPERATIONS.md for the status() JSON schema and every knob.
 """
 from __future__ import annotations
 
@@ -58,6 +61,27 @@ def status(bd: BigDawg) -> Dict[str, Any]:
     return out
 
 
+def rebalance(bd: BigDawg, factor: float = 3.0) -> Dict[str, Any]:
+    """The shard rebalance hook: for every sharded stream whose Monitor
+    per-shard ingest/drop stats have gone lopsided (a shard's load >
+    ``factor`` x the median shard's), move one shard off the busiest
+    StreamEngine through the Migrator's live ``stream`` route.  Returns
+    {"moves": [...], "skipped": [...]} — a lopsided stream is skipped
+    when no move would even out the per-engine load (e.g. every engine
+    already holds exactly one shard)."""
+    moves, skipped = [], []
+    for name in sorted(bd.streams._sharded_streams()):
+        hot = bd.monitor.lopsided_shards(name, factor=factor)
+        if not hot:
+            continue
+        try:
+            moves.append(bd.streams.rebalance(name))
+        except ValueError as exc:
+            skipped.append({"stream": name, "hot_shards": hot,
+                            "reason": str(exc)})
+    return {"moves": moves, "skipped": skipped}
+
+
 def start(bd: BigDawg, interval_seconds: float = 30.0) -> None:
     """Start the background MonitoringTask daemon (paper §V.E)."""
     task = bd.start_monitoring(interval_seconds)
@@ -75,9 +99,15 @@ def main() -> None:
     from repro.core.planner import PlannerConfig
 
     ap = argparse.ArgumentParser(description="BigDAWG admin interface")
-    ap.add_argument("command", choices=("status", "demo-status", "streams"))
+    ap.add_argument("command",
+                    choices=("status", "demo-status", "streams",
+                             "rebalance"))
     ap.add_argument("--ticks", type=int, default=8,
-                    help="feed batches to run for the streams command")
+                    help="feed batches for the streams/rebalance commands")
+    ap.add_argument("--shards", type=int, default=4,
+                    help="shard count for the rebalance demo stream")
+    ap.add_argument("--stream-engines", type=int, default=2,
+                    help="StreamEngines for the rebalance demo")
     ap.add_argument("--executor-mode", choices=("concurrent", "serial"),
                     default="concurrent",
                     help="stage scheduler: overlapped DAG or serial")
@@ -88,6 +118,9 @@ def main() -> None:
     ap.add_argument("--plan-cache-size", type=int, default=128,
                     help="signature-keyed plan cache LRU capacity")
     args = ap.parse_args()
+    if args.command == "rebalance" and args.shards < 2:
+        ap.error("rebalance demo needs --shards >= 2 (a single ring "
+                 "has nothing to move)")
     cfg = PlannerConfig(
         plan_parallelism=args.plan_parallelism,
         cache_size=args.plan_cache_size,
@@ -97,6 +130,42 @@ def main() -> None:
     if args.command == "demo-status":
         from repro.data.mimic import load_mimic_demo
         load_mimic_demo(bd)
+    elif args.command == "rebalance":
+        # live-migration demo: a key-hashed sharded stream fed a skewed
+        # key distribution goes lopsided; the rebalance hook moves a
+        # shard off the hot StreamEngine while a standing query runs
+        import numpy as np
+        bd.register_stream("streamstore0", "vitals.stream",
+                           ("patient", "hr"), capacity=4096,
+                           shards=args.shards, shard_key="patient",
+                           num_engines=args.stream_engines)
+        bd.register_continuous(
+            "bdstream(aggregate(window(vitals.stream, 64), avg(hr)))",
+            every_n_ticks=1, name="hr_avg")
+        rng = np.random.default_rng(0)
+        stream = bd.engines["streamstore0"].get("vitals.stream")
+        for _ in range(args.ticks):
+            # heavy hitter: ~85% of rows are one patient, hashing onto a
+            # single shard — the classic skew that strands one engine hot
+            patient = np.where(
+                rng.random(256) < 0.85, 1.0,
+                rng.integers(0, 4 * args.shards, 256).astype(float))
+            stream.append({"patient": patient,
+                           "hr": 75 + rng.standard_normal(256)})
+            bd.streams.tick()
+        before = {i: s["engine"] for i, s in
+                  bd.monitor.shard_stats.get("vitals.stream",
+                                             {}).items()}
+        outcome = rebalance(bd)
+        after = {i: s["engine"] for i, s in
+                 stream.shard_stats().items()}
+        st = status(bd)
+        print(json.dumps({
+            "shards_before": before, "rebalance": outcome,
+            "shards_after": after,
+            "standing_query": st["streams"]["queries"]["hr_avg"],
+        }, indent=1))
+        return
     elif args.command == "streams":
         # live streaming island demo: feed the synthetic MIMIC waveform
         # stream, run a standing window-average query on every batch

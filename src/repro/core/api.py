@@ -65,17 +65,102 @@ class BigDawg:
         return self.planner.process_query(bql, is_training_mode=training)
 
     # -- streaming island (repro.stream) --------------------------------------
+    def ensure_stream_engines(self, n: int) -> list:
+        """Grow the streaming island to ``n`` StreamEngines
+        (``streamstore0..streamstore{n-1}``), registering the standard
+        casts for each new engine — binary into the array island, staged
+        into the relational island, and the live ``stream`` state-move
+        route between every pair of StreamEngines.  Idempotent."""
+        from repro.stream.engine import StreamEngine
+        names = [f"streamstore{i}" for i in range(max(1, n))]
+        for ename in names:
+            if ename in self.engines:
+                continue
+            self.add_engine(StreamEngine(ename, self.mesh, self.rules))
+            if "densehbm0" in self.engines:
+                self.register_cast(ename, "densehbm0", "binary")
+            for host in ("hoststore0", "hoststore1"):
+                if host in self.engines:
+                    self.register_cast(ename, host, "staged")
+        # only the numbered pool is managed here; a user-added engine
+        # like "streamstore_backup" is left alone (and must not break
+        # the numeric sort below)
+        stream_engines = [e for e in self.engines
+                          if e.startswith("streamstore")
+                          and e[len("streamstore"):].isdigit()]
+        for src in stream_engines:
+            for dst in stream_engines:
+                if src == dst:
+                    continue
+                s = self.catalog.engine_by_name(src)
+                d = self.catalog.engine_by_name(dst)
+                if not any(c.method == "stream" for c in
+                           self.catalog.casts_between(s.eid, d.eid)):
+                    self.register_cast(src, dst, "stream")
+        return sorted(stream_engines,
+                      key=lambda e: int(e[len("streamstore"):]))
+
     def register_stream(self, engine_name: str, name: str, fields,
-                        capacity: int = 4096):
-        """Create a ring-buffer stream on a StreamEngine and register it
-        as a catalog object (so the Planner can place streaming nodes)."""
-        from repro.stream.engine import Stream, StreamEngine
+                        capacity: int = 4096, shards: int = 1,
+                        shard_key: Optional[str] = None,
+                        num_engines: Optional[int] = None,
+                        rolling: bool = True, block_rows: int = 64):
+        """Create a ring-buffer stream and register it in the catalog (so
+        the Planner can place streaming nodes).
+
+        ``shards=1``: one ``Stream`` on ``engine_name`` (existing
+        behavior).  ``shards>1``: the logical stream is hash-partitioned
+        into ``shards`` ring buffers spread round-robin over
+        ``num_engines`` StreamEngines (default: one engine per shard,
+        auto-added via ``ensure_stream_engines``); the returned
+        ``ShardedStream`` handle is registered on every participating
+        engine, so BQL ops stay shard-transparent.  ``capacity`` is the
+        logical total, split evenly across shards.  ``shard_key`` hashes
+        rows by that field's value instead of round-robin seq blocks.
+        """
+        from repro.stream.engine import (SEQ_FIELD, ShardedStream, Stream,
+                                         StreamEngine)
         assert isinstance(self.engines[engine_name], StreamEngine), \
             engine_name
-        stream = Stream(name, fields, capacity)
-        self.register_object(engine_name, name, stream,
+        if shards <= 1:
+            stream = Stream(name, fields, capacity, rolling=rolling)
+            self.register_object(engine_name, name, stream,
+                                 fields=tuple(fields))
+            return stream
+        spread = num_engines or shards
+        # ensure_stream_engines returns the whole (possibly larger)
+        # streaming island; spread the shards over only the first
+        # `spread` engines so the documented num_engines contract holds
+        engine_names = self.ensure_stream_engines(spread)[:spread]
+        per_shard = max(1, -(-int(capacity) // shards))      # ceil div
+        pairs = []
+        for i in range(shards):
+            ename = engine_names[i % len(engine_names)]
+            shard = Stream(f"{name}@shard{i}",
+                           tuple(fields) + (SEQ_FIELD,),
+                           per_shard, rolling=rolling)
+            self.register_object(ename, shard.name, shard,
+                                 fields=shard.fields)
+            pairs.append((ename, shard))
+        handle = ShardedStream(name, fields, pairs, shard_key=shard_key,
+                               block_rows=block_rows)
+        # the handle lives on every participating engine AND the caller's
+        # anchor engine (shards always spread over streamstore0..spread-1,
+        # but engine_name must still resolve the logical stream)
+        participating = sorted(set(e for e, _ in pairs) | {engine_name})
+        self.register_object(participating[0], name, handle,
                              fields=tuple(fields))
-        return stream
+        for ename in participating[1:]:
+            self.engines[ename].put(name, handle)
+        return handle
+
+    def rebalance_stream(self, stream: str, shard: Optional[int] = None,
+                         to_engine: Optional[str] = None):
+        """Move one shard of a sharded stream to another StreamEngine
+        (live ring-buffer state; standing queries keep running) — see
+        ``StreamRuntime.rebalance``."""
+        return self.streams.rebalance(stream, shard=shard,
+                                      to_engine=to_engine)
 
     def register_continuous(self, bql: str, every_n_ticks: int = 1,
                             name: Optional[str] = None) -> ContinuousQuery:
@@ -100,16 +185,16 @@ class BigDawg:
 
 
 def default_deployment(mesh=None, rules=None,
-                       planner_config: Optional[PlannerConfig] = None
-                       ) -> BigDawg:
+                       planner_config: Optional[PlannerConfig] = None,
+                       stream_engines: int = 1) -> BigDawg:
     """The v0.1 release topology: one relational, one array, one text engine
     (+ a second relational engine, as in the paper's docker-compose which
     ships postgres-data1 and postgres-data2), with binary+staged casts —
     extended with the streaming island's StreamEngine (S-Store analog,
     arXiv:1609.07548) whose window views cast into the array island over
-    the binary route and into the relational island over the staged one."""
-    from repro.stream.engine import StreamEngine
-
+    the binary route and into the relational island over the staged one.
+    ``stream_engines`` grows the streaming island for sharded streams
+    (``register_stream(..., shards=N)`` auto-grows it on demand too)."""
     bd = BigDawg(mesh=mesh, rules=rules, planner_config=planner_config)
     bd.add_engine(HostStoreEngine("hoststore0", mesh, rules))
     bd.add_engine(HostStoreEngine("hoststore1", mesh, rules))
@@ -127,9 +212,7 @@ def default_deployment(mesh=None, rules=None,
                 bd.register_cast(src, dst, "staged")
     bd.register_cast("densehbm0", "kvstore0", "quant")
     # streaming island: window->array rides the fast binary route;
-    # window->table pays the staged (format-translating) route
-    bd.add_engine(StreamEngine("streamstore0", mesh, rules))
-    bd.register_cast("streamstore0", "densehbm0", "binary")
-    bd.register_cast("streamstore0", "hoststore0", "staged")
-    bd.register_cast("streamstore0", "hoststore1", "staged")
+    # window->table pays the staged (format-translating) route; between
+    # StreamEngines the live "stream" state-move route backs rebalancing
+    bd.ensure_stream_engines(stream_engines)
     return bd

@@ -128,6 +128,26 @@ class Catalog:
             self.casts[row.cast_id] = row
             return row
 
+    def relocate_object(self, obj_name: str,
+                        engine_name: str) -> ObjectRow:
+        """Re-home an object's logical/physical database onto another
+        engine's database (live stream-shard migration keeps the catalog
+        truthful about where each shard's ring buffer lives)."""
+        with self._lock:
+            obj = self.object_by_name(obj_name)
+            if obj is None:
+                raise ValueError(f"unknown catalog object {obj_name!r}")
+            engine = self.engine_by_name(engine_name)
+            if engine is None:
+                raise ValueError(f"unknown catalog engine {engine_name!r}")
+            db = next((d for d in self.databases.values()
+                       if d.engine_id == engine.eid), None)
+            if db is None:
+                raise ValueError(f"engine {engine_name!r} has no database")
+            obj.logical_db = db.dbid
+            obj.physical_db = db.dbid
+            return obj
+
     # -- readers ------------------------------------------------------------
     def engine_by_name(self, name: str) -> Optional[EngineRow]:
         for row in self.engines.values():

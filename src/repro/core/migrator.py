@@ -9,6 +9,14 @@ Routes:
            pays format translation + dispatch costs.
   quant  — binary + int8 re-coding through the quant_cast Pallas kernel
            (KV-cache pages, gradient compression) — a beyond-paper cast.
+  stream — live stream-state *move* between StreamEngines: the ring
+           buffer's full state (data, cumulative rings, seq watermark,
+           drop counters, rate history) is deep-copied onto the
+           destination and the source copy deleted, so a shard can be
+           rebalanced under a running standing query without losing
+           continuity.  Unlike the other routes this one moves rather
+           than copies — two live replicas of one append-ordered buffer
+           would fork the seq space.
 
 On a TPU mesh the binary route between DenseHBM shardings is a resharding
 collective (device_put to a new NamedSharding) — no host round-trip; the
@@ -92,6 +100,9 @@ class Migrator:
         elif method == "quant":
             self._quant_migrate(engine_from, object_from, engine_to,
                                 object_to, params)
+        elif method == "stream":
+            self._stream_migrate(engine_from, object_from, engine_to,
+                                 object_to)
         else:
             raise MigrationException(f"unknown cast method {method!r}")
         t2 = time.perf_counter()
@@ -120,6 +131,45 @@ class Migrator:
                                   key=lambda c: order.get(c.method, 9)
                                   )[0].method
         return "binary"
+
+    def _stream_migrate(self, engine_from: Engine, object_from: str,
+                        engine_to: Engine, object_to: str) -> None:
+        """Move a live ring buffer between StreamEngines (see module
+        docstring: this route moves, the others copy).
+
+        Callers must serialize producers around a direct move: a row
+        appended to the source between ``export_state`` and the delete
+        below lands in the doomed object and is lost.  Shard moves are
+        safe — ``ShardedStream.migrate_shard`` holds the coordinator
+        lock, which every scatter append also takes — but moving an
+        unsharded stream under a live producer needs the same external
+        serialization (pause the feed, or move between ticks)."""
+        from repro.stream.engine import Stream, StreamEngine
+        obj = engine_from.get(object_from)
+        if not isinstance(obj, Stream):
+            raise MigrationException(
+                f"stream cast needs a Stream source, got "
+                f"{type(obj).__name__} for {object_from!r}")
+        if not isinstance(engine_to, StreamEngine):
+            raise MigrationException(
+                f"stream cast needs a StreamEngine destination, "
+                f"{engine_to.name} is {engine_to.kind}")
+        if engine_to is engine_from and object_to == object_from:
+            # the stream route moves (put + delete source); a self-move
+            # would delete the freshly imported copy and lose the buffer
+            raise MigrationException(
+                f"stream cast cannot move {object_from!r} onto itself "
+                f"on {engine_from.name}")
+        state = obj.export_state()
+        engine_to.put(object_to, Stream.from_state(state))
+        engine_from.delete(object_from)
+        # a move changes physical placement, so the catalog must follow
+        # (copy routes leave the source object untouched and don't)
+        if (self.catalog is not None
+                and self.catalog.object_by_name(object_to) is not None
+                and self.catalog.engine_by_name(engine_to.name)
+                is not None):
+            self.catalog.relocate_object(object_to, engine_to.name)
 
     def _quant_migrate(self, engine_from: Engine, object_from: str,
                        engine_to: Engine, object_to: str,

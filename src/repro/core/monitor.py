@@ -49,6 +49,10 @@ class Monitor:
         # per-continuous-query tick health (repro.stream.continuous)
         self.stream_ewma: Dict[str, float] = {}
         self.stream_stats: Dict[str, Dict[str, int]] = {}
+        # latest per-shard ingest/drop snapshot of each sharded stream
+        # (StreamRuntime.tick feeds this; the admin rebalance hook reads
+        # it to spot lopsided placements)
+        self.shard_stats: Dict[str, Dict[int, Dict[str, float]]] = {}
 
     # -- benchmark API (paper naming) ----------------------------------------
     def add_benchmarks(self, signature: Signature, lean: bool,
@@ -179,6 +183,46 @@ class Monitor:
             stats["ticks"] += 1
             stats["dropped"] += int(dropped)
             stats["backpressure"] += int(bool(lagging))
+
+    @staticmethod
+    def shard_load(stats: Dict[str, float]) -> float:
+        """One shard's ingest load: appended rows, weighted up by drops
+        (a dropping shard is oversubscribed even at a middling rate).
+        Shared by lopsided_shards and StreamRuntime.rebalance so the
+        detector and the mover can never disagree."""
+        return (float(stats.get("appended", 0))
+                + 2.0 * float(stats.get("dropped", 0)))
+
+    def observe_shards(self, stream_name: str,
+                       shard_stats: Dict[int, Dict[str, float]]) -> None:
+        """Record the latest per-shard ingest/drop snapshot of a sharded
+        stream (appended/dropped/rows/engine per shard)."""
+        with self._lock:
+            self.shard_stats[stream_name] = {
+                int(i): dict(st) for i, st in shard_stats.items()}
+
+    def lopsided_shards(self, stream_name: str, factor: float = 3.0
+                        ) -> List[int]:
+        """Shards of ``stream_name`` whose ingest load (appended rows,
+        weighted up by drops — a shard that drops is oversubscribed even
+        if its raw rate is middling) exceeds ``factor`` x the median
+        shard's.  Empty when the stream is unknown or balanced."""
+        with self._lock:
+            stats = self.shard_stats.get(stream_name)
+            if not stats or len(stats) < 2:
+                return []
+            loads = {i: self.shard_load(st) for i, st in stats.items()}
+            vals = sorted(loads.values())
+            # lower median: with the upper one, skew becomes invisible
+            # whenever half or more of the shards are hot (a 2-shard
+            # stream could never trigger the rebalance hook)
+            median = vals[(len(vals) - 1) // 2]
+            if median <= 0:
+                # all load on some shards, none on the median: any shard
+                # carrying rows while the median is idle is lopsided
+                return sorted(i for i, v in loads.items() if v > 0)
+            return sorted(i for i, v in loads.items()
+                          if v > factor * median)
 
     def stragglers(self, factor: float = 3.0) -> List[str]:
         """Engines whose EWMA latency exceeds ``factor`` x fleet median."""

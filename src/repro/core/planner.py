@@ -231,6 +231,25 @@ class Planner:
                        if all(self.engines[m].has(r) for r in refs)]
             if holding:
                 members = holding
+        if node.island == "streaming" and len(members) > 1 and refs:
+            # a ShardedStream handle lives on every participating
+            # StreamEngine, so all placements of a gather read are
+            # semantically identical — pin to the handle's home engine
+            # instead of enumerating one plan per engine
+            homes = set()
+            for r in refs:
+                holder = next((m for m in members
+                               if self.engines[m].has(r)), None)
+                home = getattr(self.engines[holder].get(r),
+                               "home_engine", None) if holder else None
+                if home is None:
+                    homes = None
+                    break
+                homes.add(home)
+            if homes and len(homes) == 1:
+                home = homes.pop()
+                if home in members:
+                    members = [home]
         # straggler avoidance (Monitor feedback loop, DESIGN.md §5)
         slow = set(self.monitor.stragglers())
         fast = [m for m in members if m not in slow]
@@ -296,16 +315,29 @@ class Planner:
           run, so new QEPs still get measured, and after
           ``cost_cancel_reprobe`` consecutive cancels a plan runs once
           anyway so a stale estimate can't blacklist it forever;
-        * wall-clock cancel — the fallback when estimates are missing or
-          wrong: a running plan whose elapsed wall time exceeds the
-          margin x the best finished plan's serial-sum is cancelled
-          before its next task starts (partial work discarded, nothing
-          recorded).
+        * wall-clock cancel — the fallback when an estimate is *wrong*:
+          a running plan whose elapsed wall time exceeds the margin x
+          the best finished plan's serial-sum is cancelled before its
+          next task starts (partial work discarded, nothing recorded).
+          Plans the Monitor has never estimated — and streak re-probes —
+          are exempt: they run precisely to be measured once, after
+          which the cost-model tier excludes them cheaply; aborting them
+          would re-run and re-abort them on every training query without
+          ever recording the estimate that ends the cycle.
         """
         cfg = self.config
+        # exploration runs are exempt from the wall-clock cancel below:
+        # a plan being re-probed after a cancel streak, or one the Monitor
+        # has never estimated, runs precisely to *record* a measurement —
+        # aborting it would starve the estimate forever (the plan gets
+        # re-run and re-aborted on every training query instead of being
+        # measured once and cost-model-cancelled from then on)
+        measure_exempt = set()
         if cfg.early_cancel and len(plans) > 1:
             estimates = {p.qep_id: self.monitor.estimate_seconds(
                 sig, p.qep_id) for p in plans}
+            measure_exempt.update(qid for qid, est in estimates.items()
+                             if est == float("inf"))
             finite = [v for v in estimates.values() if v < float("inf")]
             if finite:
                 cutoff = cfg.early_cancel_margin * min(finite)
@@ -324,6 +356,7 @@ class Planner:
                     if streak > cfg.cost_cancel_reprobe:
                         # re-probe: run it once so the estimate refreshes
                         keep.append(p)
+                        measure_exempt.add(p.qep_id)
                         self._cancel_streaks.pop(streak_key, None)
                     else:
                         self._cancel_streaks[streak_key] = streak
@@ -338,7 +371,7 @@ class Planner:
             start = time.perf_counter()
 
             def should_abort() -> bool:
-                if not cfg.early_cancel:
+                if not cfg.early_cancel or plan.qep_id in measure_exempt:
                     return False
                 with best_lock:
                     best = best_seconds[0]

@@ -83,7 +83,9 @@ def stream_mimic_waveforms(bd: BigDawg, *, batch_rows: int = 64,
                            seed: int = 0,
                            name: str = "mimic2v26.waveform_stream",
                            engine_name: str = "streamstore0",
-                           tick: bool = True) -> Iterator[Dict]:
+                           tick: bool = True, shards: int = 1,
+                           shard_key: str = None,
+                           num_engines: int = None) -> Iterator[Dict]:
     """Live MIMIC waveform feed: appends synthetic physiologic batches to
     a ring-buffer stream on the streaming island, one batch per
     iteration, advancing the continuous-query runtime after each.
@@ -91,13 +93,17 @@ def stream_mimic_waveforms(bd: BigDawg, *, batch_rows: int = 64,
     The signal is the same deterministic sine+noise family as
     ``load_mimic_demo``'s batch waveform, phased by the stream's global
     sequence number so a resumed feed continues the waveform seamlessly.
-    Yields a per-batch dict with append counts and the standing-query
-    responses that ran on that tick.
+    With ``shards > 1`` the stream is hash-partitioned across multiple
+    StreamEngines (scatter appends, seq-ordered gathers — results stay
+    bit-identical to the unsharded feed).  Yields a per-batch dict with
+    append counts and the standing-query responses that ran on that tick.
     """
     rng = np.random.default_rng(seed)
     engine = bd.engines[engine_name]
     if not engine.has(name):
-        bd.register_stream(engine_name, name, ("signal", "hr"), capacity)
+        bd.register_stream(engine_name, name, ("signal", "hr"), capacity,
+                           shards=shards, shard_key=shard_key,
+                           num_engines=num_engines)
     stream = engine.get(name)
     for b in range(num_batches):
         t = stream.total_appended + np.arange(batch_rows,

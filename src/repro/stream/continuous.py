@@ -85,6 +85,23 @@ class StreamRuntime:
         self._last_tick_time: Optional[float] = None
         self._tick_gap_seconds = 0.0
         self._lock = threading.RLock()
+        # serializes whole-tick execution: the background driver and a
+        # cooperative caller may tick concurrently, and per-query
+        # between-execution state (drop baselines, latency budgets) must
+        # not be read/written by two ticks at once.  Separate from
+        # self._lock so registration/status stay non-blocking while a
+        # long standing query executes.
+        self._tick_lock = threading.Lock()
+        # opt-in background tick driver (wall-clock-paced feeds); ticks
+        # stay cooperative unless start() is called
+        self._driver_thread: Optional[threading.Thread] = None
+        self._driver_stop: Optional[threading.Event] = None
+        self._driver_interval = 0.0
+        self.driver_ticks = 0
+        self.driver_errors = 0
+        self.last_driver_error: Optional[str] = None
+        # live shard rebalances performed through rebalance()
+        self.rebalances: List[Dict[str, Any]] = []
 
     # -- registration ---------------------------------------------------------
     def register_continuous(self, query: str, every_n_ticks: int = 1,
@@ -136,7 +153,13 @@ class StreamRuntime:
         """Advance one tick; run every due standing query in lean mode.
         A failing query is recorded on its own metrics (``errors`` /
         ``last_error``) and never aborts the tick or the other queries.
+        Concurrent ticks (background driver + cooperative caller)
+        serialize — logical time advances one tick at a time.
         Returns [(query name, Response)] for the queries that ran."""
+        with self._tick_lock:
+            return self._tick_locked()
+
+    def _tick_locked(self) -> List[Tuple[str, Any]]:
         with self._lock:
             now = time.monotonic()
             if self._last_tick_time is not None:
@@ -184,25 +207,193 @@ class StreamRuntime:
             self.monitor.observe_stream(cq.name, latency, dropped=drops,
                                         lagging=lagging)
             ran.append((cq.name, response))
+        # per-shard ingest/drop snapshots land in the Monitor every tick —
+        # the admin rebalance hook reads them to spot lopsided placements
+        for name, handle in self._sharded_streams().items():
+            self.monitor.observe_shards(name, handle.shard_stats())
         return ran
 
     def run_ticks(self, n: int) -> List[List[Tuple[str, Any]]]:
         return [self.tick() for _ in range(n)]
 
+    def _sharded_streams(self) -> Dict[str, Any]:
+        """Logical name -> ShardedStream handle (deduped: the handle is
+        registered on every participating StreamEngine)."""
+        from repro.stream.engine import ShardedStream, StreamEngine
+        out: Dict[str, Any] = {}
+        for engine in self.engines.values():
+            if isinstance(engine, StreamEngine):
+                for sname, obj in engine.streams().items():
+                    if isinstance(obj, ShardedStream):
+                        out[sname] = obj
+        return out
+
+    # -- background tick driver (opt-in) --------------------------------------
+    def start(self, interval_seconds: float = 0.05) -> None:
+        """Start a daemon thread calling ``tick()`` every
+        ``interval_seconds`` — wall-clock-paced standing queries, so the
+        backpressure counter measures real sustained load.  Cooperative
+        ticking (callers invoking ``tick()`` themselves) keeps working
+        alongside it; ``stop()`` joins the thread (leak-free)."""
+        assert interval_seconds > 0
+        with self._lock:
+            if self._driver_thread is not None \
+                    and self._driver_thread.is_alive():
+                raise RuntimeError("background tick driver already running")
+            stop = threading.Event()
+
+            def loop() -> None:
+                # the driver must outlive any single bad tick: per-query
+                # failures are already isolated inside tick(), and an
+                # unexpected error outside that isolation is recorded
+                # here instead of silently killing the daemon thread
+                while not stop.wait(interval_seconds):
+                    try:
+                        self.tick()
+                    except Exception as exc:             # noqa: BLE001
+                        with self._lock:
+                            self.driver_errors += 1
+                            self.last_driver_error = \
+                                f"{type(exc).__name__}: {exc}"
+                    with self._lock:
+                        self.driver_ticks += 1
+
+            self._driver_stop = stop
+            self._driver_interval = interval_seconds
+            self._driver_thread = threading.Thread(
+                target=loop, name="stream-tick-driver", daemon=True)
+            self._driver_thread.start()
+
+    def stop(self) -> bool:
+        """Stop the background driver.  Returns False when no driver is
+        running, or when a long tick keeps the thread alive past the
+        join timeout — in that case the driver stays registered (so
+        ``start()`` cannot spawn a second concurrent loop) and a later
+        ``stop()`` reaps it once the tick drains."""
+        with self._lock:
+            thread, stop = self._driver_thread, self._driver_stop
+        if thread is None:
+            return False
+        if stop is not None:
+            stop.set()
+        if thread.is_alive():
+            thread.join(timeout=5.0)
+            if thread.is_alive():
+                return False              # still draining a long tick
+        with self._lock:
+            if self._driver_thread is thread:
+                self._driver_thread = None
+                self._driver_stop = None
+        return True
+
+    @property
+    def driver_running(self) -> bool:
+        thread = self._driver_thread
+        return thread is not None and thread.is_alive()
+
+    # -- live shard rebalancing ------------------------------------------------
+    def rebalance(self, stream: str, shard: Optional[int] = None,
+                  to_engine: Optional[str] = None) -> Dict[str, Any]:
+        """Move one shard of ``stream`` to another StreamEngine through
+        the Migrator's ``stream`` route (live state: ring data + seq
+        watermark + drop counters travel; standing queries keep running).
+
+        With ``shard``/``to_engine`` unset, picks the move that best evens
+        per-engine ingest load: the busiest engine donates whichever of
+        its shards minimizes the post-move spread.  Raises ValueError if
+        no move improves the placement.
+        """
+        handle = self._sharded_streams().get(stream)
+        if handle is None:
+            raise ValueError(f"{stream!r} is not a sharded stream")
+        from repro.stream.engine import StreamEngine
+        stream_engines = [n for n, e in self.engines.items()
+                          if isinstance(e, StreamEngine)]
+        if shard is not None and not 0 <= shard < handle.num_shards:
+            raise ValueError(
+                f"{stream!r} has no shard {shard} "
+                f"(0..{handle.num_shards - 1})")
+        if to_engine is not None and to_engine not in stream_engines:
+            raise ValueError(
+                f"{to_engine!r} is not a StreamEngine "
+                f"(have: {sorted(stream_engines)})")
+        stats = handle.shard_stats()
+        loads: Dict[str, float] = {n: 0.0 for n in stream_engines}
+        for st in stats.values():
+            loads[st["engine"]] += self.monitor.shard_load(st)
+        if shard is None or to_engine is None:
+            # consider every (donor shard, destination) pair — a move off
+            # a non-busiest engine can still shrink the spread (e.g. the
+            # busiest engine's single hot shard is unmovable but another
+            # engine can hand a shard to an idle one)
+            spread = max(loads.values()) - min(loads.values())
+            best: Optional[Tuple[float, int, str]] = None
+            for i, st in stats.items():
+                if shard is not None and i != shard:
+                    continue
+                w = self.monitor.shard_load(st)
+                for dest in stream_engines:
+                    if to_engine is not None and dest != to_engine:
+                        continue
+                    if dest == st["engine"]:
+                        continue
+                    after = dict(loads)
+                    after[st["engine"]] -= w
+                    after[dest] += w
+                    new_spread = max(after.values()) - min(after.values())
+                    if new_spread < spread and (
+                            best is None or new_spread < best[0]):
+                        best = (new_spread, i, dest)
+            if best is None:
+                raise ValueError(
+                    f"no rebalancing move improves {stream!r} "
+                    f"(per-engine loads: {loads})")
+            _, shard, to_engine = best
+        result = handle.migrate_shard(
+            shard, self.planner.migrator, self.engines, to_engine)
+        move = {"stream": stream, "shard": shard,
+                "from": result.engine_from, "to": result.engine_to,
+                "rows": result.rows, "bytes": result.bytes_moved,
+                "seconds": round(result.seconds, 6)}
+        with self._lock:
+            self.rebalances.append(move)
+        self.monitor.observe_shards(stream, handle.shard_stats())
+        return move
+
     # -- introspection --------------------------------------------------------
     def status(self) -> Dict[str, Any]:
-        from repro.stream.engine import StreamEngine
+        from repro.stream.engine import ShardedStream, StreamEngine
         with self._lock:
             out: Dict[str, Any] = {
                 "ticks": self.ticks,
+                "background": {
+                    "running": self.driver_running,
+                    "interval_seconds": self._driver_interval
+                    if self.driver_running else None,
+                    "driver_ticks": self.driver_ticks,
+                    "driver_errors": self.driver_errors,
+                    "last_driver_error": self.last_driver_error},
+                "rebalances": list(self.rebalances),
                 "queries": {n: cq.metrics()
                             for n, cq in self.queries.items()},
                 "streams": {}}
         for ename, engine in self.engines.items():
-            if isinstance(engine, StreamEngine):
-                for sname, stream in engine.streams().items():
-                    info = stream.stats()
+            if not isinstance(engine, StreamEngine):
+                continue
+            for sname, stream in engine.streams().items():
+                if "@shard" in sname:
+                    continue          # shard rings report under the handle
+                if sname in out["streams"]:
+                    continue          # a handle lives on several engines;
+                    #                   gather its stats only once
+                info = stream.stats()
+                if isinstance(stream, ShardedStream):
+                    info["engine"] = stream.shard_engines()
+                    info["shard_key"] = stream.shard_key
+                    info["agg_cache_hits"] = stream.agg_cache_hits
+                    info["agg_computes"] = stream.agg_computes
+                else:
                     info["engine"] = ename
-                    info["rows_per_second"] = round(stream.rate(), 1)
-                    out["streams"][sname] = info
+                info["rows_per_second"] = round(stream.rate(), 1)
+                out["streams"][sname] = info
         return out

@@ -18,13 +18,21 @@ Window views over the buffer materialize as island data-model objects:
 Materialized windows then ride the existing Migrator casts into the array
 island (binary) or the relational island (staged) — see
 ``core/api.default_deployment``.
+
+Scale-out (arXiv:1609.07548 §streams-across-engines): a ``ShardedStream``
+hash-partitions one logical stream across multiple ``StreamEngine``s —
+scatter appends, seq-ordered gather reads — so the BQL ops stay
+shard-transparent.  Shard ring buffers are *live-migratable* between
+StreamEngines (the Migrator's ``stream`` route moves data + seq watermark
++ drop counters) without interrupting standing queries.
 """
 from __future__ import annotations
 
 import collections
 import threading
 import time
-from typing import Dict, Iterable, Optional, Sequence, Tuple
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -32,6 +40,55 @@ import numpy as np
 from repro.core import datamodel as dm
 from repro.core.engines import ENGINE_KINDS, Engine
 from repro.core.executor import DataUnavailableException
+
+# reserved per-row field carrying the logical stream's global sequence
+# number inside shard ring buffers (float64 is exact for seq < 2**53)
+SEQ_FIELD = "__seq"
+
+# aggregates that decompose into per-shard partials / rolling sums
+_ROLLING_AGGS = ("count", "sum", "avg")
+_COMBINABLE_AGGS = _ROLLING_AGGS + ("min", "max")
+
+
+def _memoized_window_aggregate(stream, size: int, fn: str, field: str,
+                               compute) -> float:
+    """Shared memo scheme for tumbling-window aggregates (Stream and
+    ShardedStream): resolve the latest complete window index k, return
+    the cached value when this window was already folded (repeat ticks
+    are O(1), and the value survives ring eviction), else call
+    ``compute(s, e)`` for global seqs [s, e) and cache it.  The caller
+    holds the stream's lock; ``stream`` provides ``total_appended``,
+    ``_agg_cache``, ``agg_cache_hits``/``agg_computes`` and ``name``."""
+    assert fn in _COMBINABLE_AGGS, fn
+    k = stream.total_appended // size - 1
+    if k < 0:
+        raise StreamException(
+            f"stream {stream.name!r}: no complete window of "
+            f"size {size} yet ({stream.total_appended} rows)")
+    key = (fn, field, size)
+    cached = stream._agg_cache.get(key)
+    if cached is not None and cached[0] == k:
+        stream.agg_cache_hits += 1
+        return cached[1]
+    value = compute(k * size, (k + 1) * size)
+    stream.agg_computes += 1
+    stream._agg_cache[key] = (k, value)
+    return value
+
+
+def _recent_rate(append_times: "collections.deque[Tuple[float, int]]"
+                 ) -> float:
+    """Rows/second over the recent (wall_time, rows) append history —
+    0.0 with fewer than two appends (shared by Stream and
+    ShardedStream.rate; caller holds the owning lock)."""
+    if len(append_times) < 2:
+        return 0.0
+    t0, _ = append_times[0]
+    t1, _ = append_times[-1]
+    if t1 <= t0:
+        return 0.0
+    rows = sum(n for _, n in list(append_times)[1:])
+    return rows / (t1 - t0)
 
 
 class StreamException(DataUnavailableException):
@@ -44,14 +101,23 @@ class Stream:
     """Append-only bounded ring buffer of rows (fixed float64 fields)."""
 
     def __init__(self, name: str, fields: Sequence[str],
-                 capacity: int = 4096) -> None:
+                 capacity: int = 4096, rolling: bool = True) -> None:
         assert fields, "a stream needs at least one field"
         assert capacity > 0, "capacity must be positive"
         self.name = name
         self.fields: Tuple[str, ...] = tuple(fields)
         self.capacity = int(capacity)
+        self.rolling = bool(rolling)
         self._cols = {f: np.zeros(self.capacity, np.float64)
                       for f in self.fields}
+        # rolling-sum support: _cum[f][pos] is the running total of field
+        # f over the buffered rows up to and including pos, so a sum over
+        # any buffered range is one subtraction (see range_sum).  Rings
+        # are built lazily on a field's first rolling aggregate — pure
+        # ingest streams never pay the memory or the per-append cumsum —
+        # and ``rolling=False`` disables them outright.
+        self._cum: Dict[str, np.ndarray] = {}
+        self._running: Dict[str, float] = {}
         self._next = 0                    # ring write position
         self._count = 0                   # valid rows in the buffer
         self.total_appended = 0           # global sequence high-water mark
@@ -59,6 +125,11 @@ class Stream:
         # (wall_time, rows) of recent appends, for rate()
         self._append_times: "collections.deque[Tuple[float, int]]" = \
             collections.deque(maxlen=64)
+        # (fn, field, size) -> (window index k, value): repeated ticks over
+        # the same complete tumbling window skip recompute entirely
+        self._agg_cache: Dict[Tuple[str, str, int], Tuple[int, float]] = {}
+        self.agg_cache_hits = 0
+        self.agg_computes = 0
         self._lock = threading.Lock()
 
     # -- ingest ---------------------------------------------------------------
@@ -78,25 +149,57 @@ class Stream:
         n = cols[self.fields[0]].shape[0]
         if any(v.shape[0] != n for v in cols.values()):
             raise StreamException("ragged append batch")
+        if n == 0:
+            with self._lock:
+                return {"appended": 0, "dropped": 0, "rows": self._count}
         with self._lock:
             dropped = max(0, self._count + n - self.capacity)
             for f in self.fields:
                 src = cols[f][-self.capacity:]        # keep only the tail
+                cum = None
+                if f in self._cum:
+                    cum = np.cumsum(src) + self._running[f]
+                    self._running[f] = float(cum[-1])
                 m = src.shape[0]
                 end = self._next + m
                 if end <= self.capacity:
                     self._cols[f][self._next:end] = src
+                    if cum is not None:
+                        self._cum[f][self._next:end] = cum
                 else:
                     first = self.capacity - self._next
                     self._cols[f][self._next:] = src[:first]
                     self._cols[f][:end % self.capacity] = src[first:]
+                    if cum is not None:
+                        self._cum[f][self._next:] = cum[:first]
+                        self._cum[f][:end % self.capacity] = cum[first:]
             self._next = (self._next + min(n, self.capacity)) % self.capacity
             self._count = min(self.capacity, self._count + n)
+            prev_total = self.total_appended
             self.total_appended += n
             self.total_dropped += dropped
+            # re-anchor the cumulative rings once per ring generation
+            # (amortized O(1)/row): without this the running totals grow
+            # for the stream's lifetime and the O(1) range_sum subtraction
+            # loses float64 precision for large-magnitude fields (e.g.
+            # epoch-millisecond timestamps) under steady small batches
+            if (self._cum and self.total_appended // self.capacity
+                    != prev_total // self.capacity):
+                self._reanchor_cums_locked()
             self._append_times.append((time.monotonic(), n))
             return {"appended": n, "dropped": dropped,
                     "rows": self._count}
+
+    def _reanchor_cums_locked(self) -> None:
+        """Rewrite every cumulative slot as a prefix sum over the
+        *buffered* rows only (base 0 at the oldest row).  All slots are
+        rewritten in one epoch, so range_sum differences stay exact, and
+        the running totals stay bounded by ~capacity x max|value|."""
+        idx = (self._pos(0) + np.arange(self._count)) % self.capacity
+        for f in self._cum:
+            cum = np.cumsum(self._cols[f][idx])
+            self._cum[f][idx] = cum
+            self._running[f] = float(cum[-1]) if self._count else 0.0
 
     # -- views ----------------------------------------------------------------
     def _ordered(self, field: str) -> np.ndarray:
@@ -152,14 +255,142 @@ class Stream:
     def rate(self) -> float:
         """Recent ingest rate in rows/second (0.0 with <2 appends)."""
         with self._lock:
-            if len(self._append_times) < 2:
-                return 0.0
-            t0, _ = self._append_times[0]
-            t1, _ = self._append_times[-1]
-            if t1 <= t0:
-                return 0.0
-            rows = sum(n for _, n in list(self._append_times)[1:])
-            return rows / (t1 - t0)
+            return _recent_rate(self._append_times)
+
+    # -- rolling-aggregate primitives -----------------------------------------
+    def _pos(self, offset: int) -> int:
+        """Ring position of the ``offset``-th oldest buffered row."""
+        return (self._next - self._count + offset) % self.capacity
+
+    def range_sum(self, field: str, a: int, b: int) -> float:
+        """Sum of buffered rows at ordered offsets ``[a, b)`` in O(1) via
+        the cumulative ring (offset 0 = oldest buffered row)."""
+        with self._lock:
+            return self._range_sum_locked(field, a, b)
+
+    def _ensure_cum_locked(self, field: str) -> bool:
+        """Build the field's cumulative ring on first use (caller holds
+        the lock).  Returns False when rolling is disabled."""
+        if field in self._cum:
+            return True
+        if not self.rolling or field == SEQ_FIELD:
+            return False
+        self._cum[field] = np.zeros(self.capacity, np.float64)
+        self._running[field] = 0.0
+        self._reanchor_cums_locked()
+        return True
+
+    def _range_sum_locked(self, field: str, a: int, b: int) -> float:
+        assert 0 <= a <= b <= self._count, (a, b, self._count)
+        if a == b:
+            return 0.0
+        if not self._ensure_cum_locked(field):      # rolling=False
+            idx = (self._pos(0) + np.arange(a, b)) % self.capacity
+            return float(self._cols[field][idx].sum())
+        hi = float(self._cum[field][self._pos(b - 1)])
+        if a > 0:
+            lo = float(self._cum[field][self._pos(a - 1)])
+        else:
+            p = self._pos(0)
+            lo = float(self._cum[field][p]) - float(self._cols[field][p])
+        return hi - lo
+
+    def _seq_bounds_locked(self, field: str, lo: float, hi: float
+                           ) -> Tuple[int, int]:
+        """Ordered offsets [a, b) of buffered rows whose ``field`` value
+        lies in ``[lo, hi)``, assuming the field is non-decreasing in
+        append order (true of the reserved seq column).  Binary search
+        over the ring's two contiguous segments — no materialization."""
+        start = self._pos(0)
+        end = start + self._count
+        col = self._cols[field]
+        if end <= self.capacity:
+            seg = col[start:end]
+            return (int(np.searchsorted(seg, lo)),
+                    int(np.searchsorted(seg, hi)))
+        older, newer = col[start:], col[:end % self.capacity]
+        n1 = older.shape[0]
+        fa, fb = np.searchsorted(older, lo), np.searchsorted(older, hi)
+        a = int(fa) if fa < n1 else n1 + int(np.searchsorted(newer, lo))
+        b = int(fb) if fb < n1 else n1 + int(np.searchsorted(newer, hi))
+        return a, b
+
+    def range_slice(self, field: str, a: int, b: int) -> np.ndarray:
+        """Copy of buffered rows at ordered offsets ``[a, b)``."""
+        with self._lock:
+            assert 0 <= a <= b <= self._count
+            idx = (self._pos(0) + np.arange(a, b)) % self.capacity
+            return self._cols[field][idx]
+
+    def ordered_arrays(self, fields: Optional[Sequence[str]] = None
+                       ) -> Tuple[int, Dict[str, np.ndarray]]:
+        """(first buffered seq, {field: oldest-first float64 copy}) — the
+        raw gather primitive (no jnp conversion, unlike snapshot())."""
+        with self._lock:
+            first_seq = self.total_appended - self._count
+            return first_seq, {f: self._ordered(f)
+                               for f in (fields or self.fields)}
+
+    def window_aggregate(self, size: int, fn: str, field: str) -> float:
+        """Aggregate over the latest complete tumbling window without
+        re-materializing it: count/sum/avg are O(1) via the cumulative
+        ring; min/max reduce over the window slice.  Repeated calls for
+        the same window index return the memoized value (the standing-
+        query fast path: ticks faster than window completion cost O(1))."""
+        with self._lock:
+            def compute(s: int, e: int) -> float:
+                first_seq = self.total_appended - self._count
+                if s < first_seq:
+                    raise StreamException(
+                        f"stream {self.name!r}: window [{s},{e}) "
+                        f"already evicted (buffer starts at {first_seq})")
+                a, b = s - first_seq, e - first_seq
+                if fn == "count":
+                    return float(size)
+                if fn in ("sum", "avg"):
+                    value = self._range_sum_locked(field, a, b)
+                    return value / size if fn == "avg" else value
+                idx = (self._pos(0) + np.arange(a, b)) % self.capacity
+                sl = self._cols[field][idx]
+                return float(sl.min() if fn == "min" else sl.max())
+
+            return _memoized_window_aggregate(self, size, fn, field,
+                                              compute)
+
+    # -- live-state migration (Migrator "stream" route) ------------------------
+    def export_state(self) -> Dict[str, Any]:
+        """Deep-copy the full live state — ring data, cumulative rings,
+        write position, seq watermark, drop counters, rate history — so a
+        Migrator can rebuild this stream byte-for-byte on another
+        StreamEngine without losing standing-query continuity."""
+        with self._lock:
+            return {
+                "name": self.name, "fields": self.fields,
+                "capacity": self.capacity, "rolling": self.rolling,
+                "cols": {f: v.copy() for f, v in self._cols.items()},
+                "cum": {f: v.copy() for f, v in self._cum.items()},
+                "running": dict(self._running),
+                "next": self._next, "count": self._count,
+                "total_appended": self.total_appended,
+                "total_dropped": self.total_dropped,
+                "append_times": list(self._append_times),
+            }
+
+    @classmethod
+    def from_state(cls, state: Dict[str, Any]) -> "Stream":
+        stream = cls(state["name"], state["fields"], state["capacity"],
+                     rolling=state.get("rolling", True))
+        stream._cols = {f: np.asarray(v, np.float64)
+                        for f, v in state["cols"].items()}
+        stream._cum = {f: np.asarray(v, np.float64)
+                       for f, v in state["cum"].items()}
+        stream._running = dict(state["running"])
+        stream._next = int(state["next"])
+        stream._count = int(state["count"])
+        stream.total_appended = int(state["total_appended"])
+        stream.total_dropped = int(state["total_dropped"])
+        stream._append_times.extend(state["append_times"])
+        return stream
 
     # -- island data-model plumbing ------------------------------------------
     @property
@@ -177,6 +408,386 @@ class Stream:
                     "dropped": self.total_dropped}
 
 
+class ShardedStream:
+    """One logical stream hash-partitioned across multiple StreamEngines.
+
+    Each shard is an ordinary ``Stream`` named ``{name}@shard{i}`` living
+    on its own engine, with the reserved ``__seq`` field carrying the
+    logical stream's global sequence number.  The coordinator handle (this
+    object) is registered on *every* participating StreamEngine under the
+    logical name, so any engine the Planner picks can serve the query —
+    shard-transparent scatter appends and seq-ordered gather reads.
+
+    Partitioning: round-robin over contiguous seq *blocks* of
+    ``block_rows`` (default — balanced, and the scatter splits a batch
+    into zero-copy views) or, with ``shard_key``, by hash of a field's
+    value (``floor(|v|) mod N`` — the realistic skew-prone placement the
+    rebalance hook exists for).  Either way every row carries its global
+    seq, so gathers are bit-identical to the unsharded stream for every
+    row the shards still retain; shard rings evict independently, so
+    skewed key traffic can evict a hot shard's rows earlier than one big
+    ring would have (seq gaps in snapshots, tumbling windows raise).
+
+    Concurrency: appends and gathers serialize on the coordinator lock
+    (global seq order is the stream's only notion of time, and it keeps
+    every shard ring seq-sorted); inside an append the per-shard ring
+    writes fan out to a thread pool, so large-batch ingest scales with
+    engine count (numpy copies release the GIL).  Shard locks nest
+    strictly inside the coordinator lock.
+    """
+
+    # fan the per-shard writes out to threads only when the batch is big
+    # enough for numpy to dominate (below this the pool overhead wins)
+    PARALLEL_APPEND_MIN_ROWS = 2048
+
+    def __init__(self, name: str, fields: Sequence[str],
+                 shards: List[Tuple[str, Stream]],
+                 shard_key: Optional[str] = None,
+                 block_rows: int = 64) -> None:
+        assert shards, "a sharded stream needs at least one shard"
+        self.name = name
+        self.fields: Tuple[str, ...] = tuple(fields)
+        self.shard_key = shard_key
+        self.block_rows = int(block_rows)
+        assert self.block_rows > 0
+        if shard_key is not None:
+            assert shard_key in self.fields, shard_key
+        self._engines: List[str] = [e for e, _ in shards]
+        self._shards: List[Stream] = [s for _, s in shards]
+        self.total_appended = 0           # global sequence high-water mark
+        self._append_times: "collections.deque[Tuple[float, int]]" = \
+            collections.deque(maxlen=64)
+        self._agg_cache: Dict[Tuple[str, str, int], Tuple[int, float]] = {}
+        self.agg_cache_hits = 0
+        self.agg_computes = 0
+        self.migrations = 0               # live shard moves (rebalances)
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._lock = threading.RLock()
+
+    # -- topology -------------------------------------------------------------
+    @property
+    def num_shards(self) -> int:
+        return len(self._shards)
+
+    @property
+    def home_engine(self) -> str:
+        """Engine anchoring shard 0 — the Planner's canonical placement
+        for gather reads (all placements are equivalent; pinning one keeps
+        plan enumeration from exploding with engine count)."""
+        with self._lock:
+            return self._engines[0]
+
+    def shard_name(self, idx: int) -> str:
+        return f"{self.name}@shard{idx}"
+
+    def shard_engines(self) -> List[str]:
+        with self._lock:
+            return list(self._engines)
+
+    @property
+    def total_dropped(self) -> int:
+        return sum(s.total_dropped for s in self._shards)
+
+    @property
+    def num_rows(self) -> int:
+        return sum(s.num_rows for s in self._shards)
+
+    def nbytes(self) -> int:
+        # shard rings are separate engine objects and already counted
+        # there; the handle itself holds no row data
+        return 0
+
+    # -- ingest: scatter ------------------------------------------------------
+    def append(self, rows: Dict[str, Iterable[float]]) -> Dict[str, int]:
+        """Scatter-append a batch: global seqs assigned under the
+        coordinator lock, rows partitioned to their shards, per-shard ring
+        writes fanned out in parallel for large batches."""
+        if set(rows) != set(self.fields):
+            raise StreamException(
+                f"stream {self.name!r} fields {self.fields} != "
+                f"appended fields {tuple(rows)}")
+        cols = {f: np.asarray(rows[f], np.float64).reshape(-1)
+                for f in self.fields}
+        n = cols[self.fields[0]].shape[0]
+        if any(v.shape[0] != n for v in cols.values()):
+            raise StreamException("ragged append batch")
+        nsh = len(self._shards)
+        with self._lock:
+            t = self.total_appended
+            seqs = np.arange(t, t + n, dtype=np.float64)
+            if self.shard_key is None and n // self.block_rows <= 32:
+                # round-robin over seq blocks: shard of seq q is
+                # (q // block_rows) % N.  A batch spanning few blocks
+                # splits into contiguous zero-copy views at block
+                # boundaries (the big-batch ingest fast path)
+                blk = self.block_rows
+                segs: List[List[Tuple[int, int]]] = [[] for _ in
+                                                     range(nsh)]
+                off = 0
+                while off < n:
+                    q = t + off
+                    take = min(n - off, blk - q % blk)
+                    segs[(q // blk) % nsh].append((off, off + take))
+                    off += take
+                parts = []
+                for i in range(nsh):
+                    if len(segs[i]) == 1:
+                        a, b = segs[i][0]
+                        payload = {f: v[a:b] for f, v in cols.items()}
+                        payload[SEQ_FIELD] = seqs[a:b]
+                    else:
+                        payload = {f: np.concatenate(
+                            [v[a:b] for a, b in segs[i]])
+                            for f, v in cols.items()} if segs[i] else \
+                            {f: v[:0] for f, v in cols.items()}
+                        payload[SEQ_FIELD] = np.concatenate(
+                            [seqs[a:b] for a, b in segs[i]]) \
+                            if segs[i] else seqs[:0]
+                    parts.append(payload)
+            else:
+                if self.shard_key is None:
+                    # many small blocks: a Python per-segment loop would
+                    # dominate — compute owners vectorized instead
+                    owner = ((t + np.arange(n)) // self.block_rows) % nsh
+                else:
+                    # non-finite key values (NaN/±inf — missing vitals,
+                    # sensor saturation) route deterministically to
+                    # shard 0 instead of through the C-undefined
+                    # float->int64 cast
+                    owner = np.floor(np.abs(np.nan_to_num(
+                        cols[self.shard_key], nan=0.0, posinf=0.0,
+                        neginf=0.0))).astype(np.int64) % nsh
+                parts = []
+                for i in range(nsh):
+                    idx = np.nonzero(owner == i)[0]
+                    payload = {f: v[idx] for f, v in cols.items()}
+                    payload[SEQ_FIELD] = seqs[idx]
+                    parts.append(payload)
+            self.total_appended += n
+            live = [(self._shards[i], parts[i]) for i in range(nsh)
+                    if parts[i][SEQ_FIELD].shape[0]]
+            if (len(live) > 1
+                    and n >= self.PARALLEL_APPEND_MIN_ROWS):
+                if self._pool is None:
+                    self._pool = ThreadPoolExecutor(
+                        max_workers=nsh,
+                        thread_name_prefix=f"scatter-{self.name}")
+                results = list(self._pool.map(
+                    lambda sp: sp[0].append(sp[1]), live))
+            else:
+                results = [s.append(p) for s, p in live]
+            dropped = sum(r["dropped"] for r in results)
+            self._append_times.append((time.monotonic(), n))
+            return {"appended": n, "dropped": dropped,
+                    "rows": sum(s.num_rows for s in self._shards)}
+
+    # -- reads: seq-ordered gather --------------------------------------------
+    def _gather(self) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+        """All buffered rows across shards, merged in global seq order
+        (caller holds the coordinator lock)."""
+        seq_parts, col_parts = [], {f: [] for f in self.fields}
+        for shard in self._shards:
+            _, arrays = shard.ordered_arrays()
+            seq_parts.append(arrays[SEQ_FIELD])
+            for f in self.fields:
+                col_parts[f].append(arrays[f])
+        seqs = np.concatenate(seq_parts) if seq_parts else \
+            np.zeros(0, np.float64)
+        order = np.argsort(seqs, kind="stable")
+        return seqs[order], {f: np.concatenate(v)[order]
+                             for f, v in col_parts.items()}
+
+    def _gather_range(self, s: int, e: int
+                      ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+        """Rows with global seq in [s, e), merged in seq order — each
+        shard contributes only its slice of the range (located by ring
+        binary search), so the cost scales with the window size rather
+        than the total buffered rows (caller holds the coordinator
+        lock)."""
+        seq_parts, col_parts = [], {f: [] for f in self.fields}
+        for shard in self._shards:
+            with shard._lock:
+                a, b = shard._seq_bounds_locked(SEQ_FIELD, float(s),
+                                                float(e))
+                if b <= a:
+                    continue
+                idx = (shard._pos(0) + np.arange(a, b)) % shard.capacity
+                seq_parts.append(shard._cols[SEQ_FIELD][idx])
+                for f in self.fields:
+                    col_parts[f].append(shard._cols[f][idx])
+        if not seq_parts:
+            return np.zeros(0, np.float64), {f: np.zeros(0, np.float64)
+                                             for f in self.fields}
+        seqs = np.concatenate(seq_parts)
+        order = np.argsort(seqs, kind="stable")
+        return seqs[order], {f: np.concatenate(v)[order]
+                             for f, v in col_parts.items()}
+
+    def snapshot(self) -> dm.Table:
+        with self._lock:
+            seqs, cols = self._gather()
+            out = {"seq": jnp.asarray(seqs.astype(np.int64))}
+            for f in self.fields:
+                out[f] = jnp.asarray(cols[f])
+            return dm.Table(out)
+
+    def window(self, size: int,
+               slide: Optional[int] = None) -> dm.ArrayObject:
+        """Tumbling/sliding window over the logical seq space; gathered
+        values are bit-identical to the unsharded stream's window."""
+        assert size > 0
+        with self._lock:
+            total = self.total_appended
+            if slide is None:
+                k = total // size - 1
+                if k < 0:
+                    raise StreamException(
+                        f"stream {self.name!r}: no complete window of "
+                        f"size {size} yet ({total} rows)")
+                s = k * size
+                seqs, cols = self._gather_range(s, s + size)
+                if seqs.shape[0] != size:
+                    raise StreamException(
+                        f"stream {self.name!r}: window [{s},{s + size}) "
+                        f"already evicted (shards retain "
+                        f"{seqs.shape[0]}/{size} rows)")
+                attrs = {f: jnp.asarray(cols[f])
+                         for f in self.fields}
+                return dm.ArrayObject(attrs, ("tick",))
+            assert slide > 0
+            seqs, cols = self._gather()
+            # the contiguous suffix of the seq space still fully buffered
+            contiguous = np.nonzero(
+                seqs != np.arange(total - seqs.shape[0], total))[0]
+            a = int(contiguous[-1]) + 1 if contiguous.size else 0
+            count = seqs.shape[0] - a
+            if count < size:
+                raise StreamException(
+                    f"stream {self.name!r}: {count} contiguous rows < "
+                    f"window size {size}")
+            starts = np.arange(0, count - size + 1, slide)
+            attrs = {}
+            for f in self.fields:
+                buf = cols[f][a:]
+                attrs[f] = jnp.asarray(
+                    np.stack([buf[s0:s0 + size] for s0 in starts]))
+            return dm.ArrayObject(attrs, ("window", "tick"))
+
+    def window_aggregate(self, size: int, fn: str, field: str) -> float:
+        """Combine per-shard partial aggregates over the latest complete
+        tumbling window — no gather, no row materialization.  Round-robin
+        shards locate their slice arithmetically (O(1) for count/sum/avg
+        via each shard's cumulative ring); key-hashed shards locate it by
+        binary search on their seq column.  Memoized per window index."""
+        with self._lock:
+            def compute(s: int, e: int) -> float:
+                partials: List[Tuple[float, int]] = []   # (value, rows)
+                for shard in self._shards:
+                    partials.append(self._shard_partial(shard, fn, field,
+                                                        s, e))
+                rows = sum(c for _, c in partials)
+                if rows != size:
+                    raise StreamException(
+                        f"stream {self.name!r}: window [{s},{e}) already "
+                        f"evicted (shards retain {rows}/{size} rows)")
+                if fn == "count":
+                    return float(size)
+                if fn in ("sum", "avg"):
+                    value = sum(v for v, c in partials if c)
+                    return value / size if fn == "avg" else value
+                if fn == "min":
+                    return min(v for v, c in partials if c)
+                return max(v for v, c in partials if c)
+
+            return _memoized_window_aggregate(self, size, fn, field,
+                                              compute)
+
+    def _shard_partial(self, shard: Stream, fn: str, field: str,
+                       s: int, e: int) -> Tuple[float, int]:
+        """One shard's (partial value, row count) for global seqs [s, e).
+        Shard rings are seq-sorted (appends serialize on the coordinator),
+        so the slice bounds come from an O(log n) ring binary search."""
+        with shard._lock:
+            a_off, b_off = shard._seq_bounds_locked(SEQ_FIELD, float(s),
+                                                    float(e))
+            if b_off <= a_off:
+                return 0.0, 0
+            count = b_off - a_off
+            if fn in ("sum", "avg"):
+                return shard._range_sum_locked(field, a_off, b_off), count
+            if fn == "count":
+                return float(count), count
+            idxs = (shard._pos(0) + np.arange(a_off, b_off)) \
+                % shard.capacity
+            sl = shard._cols[field][idxs]
+            return float(sl.min() if fn == "min" else sl.max()), count
+
+    # -- rate & stats ---------------------------------------------------------
+    def rate(self) -> float:
+        with self._lock:
+            return _recent_rate(self._append_times)
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            out: Dict[str, Any] = {
+                "rows": self.num_rows,
+                "capacity": sum(s.capacity for s in self._shards),
+                "appended": self.total_appended,
+                "dropped": self.total_dropped,
+                "shards": self.shard_stats(),
+            }
+            return out
+
+    def shard_stats(self) -> Dict[int, Dict[str, Any]]:
+        """Per-shard ingest/drop health (the Monitor's rebalance signal)."""
+        with self._lock:
+            out = {}
+            for i, (ename, shard) in enumerate(
+                    zip(self._engines, self._shards)):
+                st = shard.stats()
+                st["engine"] = ename
+                st["rows_per_second"] = round(shard.rate(), 1)
+                out[i] = st
+            return out
+
+    # -- live shard migration --------------------------------------------------
+    def migrate_shard(self, idx: int, migrator, engines: Dict[str, Any],
+                      to_engine: str):
+        """Move shard ``idx``'s live ring buffer to another StreamEngine
+        through the Migrator's ``stream`` route, holding the coordinator
+        lock so in-flight standing queries never observe a half-moved
+        shard; seq watermark and drop counters travel with the state
+        (the Migrator keeps the catalog's placement truthful)."""
+        from repro.core.migrator import MigrationParams
+        with self._lock:
+            src_name = self._engines[idx]
+            if to_engine == src_name:
+                raise ValueError(
+                    f"shard {idx} of {self.name!r} already on {to_engine}")
+            obj_name = self.shard_name(idx)
+            result = migrator.migrate(
+                engines[src_name], obj_name, engines[to_engine], obj_name,
+                MigrationParams(method="stream"))
+            self._shards[idx] = engines[to_engine].get(obj_name)
+            self._engines[idx] = to_engine
+            self.migrations += 1
+            # the destination now participates: it must resolve the
+            # logical name too (shard-transparent reads, planner pin)
+            if not engines[to_engine].has(self.name):
+                engines[to_engine].put(self.name, self)
+            return result
+
+    def close(self) -> None:
+        """Shut down the scatter fan-out pool.  Optional: a dropped
+        handle's pool is reclaimed when the executor is garbage
+        collected (its workers exit via the stdlib's weakref hook);
+        call this for deterministic teardown in tests/benchmarks."""
+        with self._lock:
+            if self._pool is not None:
+                self._pool.shutdown(wait=True)
+                self._pool = None
+
+
 class StreamEngine(Engine):
     """S-Store analog: holds named ``Stream`` objects for the streaming
     island.  Materialized window views (plain Tables/ArrayObjects) pass
@@ -191,9 +802,11 @@ class StreamEngine(Engine):
         self.put(name, stream)
         return stream
 
-    def streams(self) -> Dict[str, Stream]:
+    def streams(self) -> Dict[str, Any]:
+        """Streams this engine serves: plain ring buffers, shard rings
+        (``name@shardN``), and sharded-stream coordinator handles."""
         return {n: o for n, o in self._objects.items()
-                if isinstance(o, Stream)}
+                if isinstance(o, (Stream, ShardedStream))}
 
 
 ENGINE_KINDS["stream_store"] = StreamEngine

@@ -15,6 +15,13 @@ stored on a ``StreamEngine``:
 A bare stream name evaluates to its snapshot.  Window views are ordinary
 island data-model objects, so ``bdcast`` moves them into the array island
 (binary route) or the relational island (staged route) unchanged.
+
+All ops are shard-transparent: a ``ShardedStream`` handle (one logical
+stream hash-partitioned across several StreamEngines) answers the same
+snapshot/window/aggregate/rate calls with seq-ordered gathers, and
+``aggregate(window(S, n), fn(attr))`` over a tumbling window takes the
+rolling fast path — per-shard partial aggregates combined, memoized per
+window index — instead of materializing the window each tick.
 """
 from __future__ import annotations
 
@@ -26,10 +33,15 @@ import jax.numpy as jnp
 
 from repro.core import datamodel as dm
 from repro.core.engines import Engine
-from repro.stream.engine import Stream, StreamException
+from repro.stream.engine import (_COMBINABLE_AGGS, ShardedStream, Stream,
+                                 StreamException)
 
 _AGG_RE = re.compile(r"^(count|sum|avg|min|max)\(\s*(\*|[\w\.]+)\s*\)$",
                      re.IGNORECASE)
+# aggregate(window(S, n), fn(attr)) — the rolling/partial-combine shape:
+# a tumbling (no slide) window, directly aggregated
+_WINDOW_AGG_RE = re.compile(
+    r"^window\(\s*([\w\.]+)\s*,\s*(\d+)\s*\)$", re.IGNORECASE)
 
 
 def _balanced(s: str):
@@ -70,9 +82,9 @@ def _split_args(s: str) -> List[str]:
     return parts
 
 
-def _get_stream(engine: Engine, name: str) -> Stream:
+def _get_stream(engine: Engine, name: str):
     obj = engine.get(name.strip())
-    if not isinstance(obj, Stream):
+    if not isinstance(obj, (Stream, ShardedStream)):
         raise StreamException(f"{name!r} is not a stream on {engine.name}")
     return obj
 
@@ -108,10 +120,24 @@ def execute_stream(engine: Engine, query: str):
     if fn == "aggregate":
         if len(args) != 2:
             raise ValueError(f"aggregate needs (expr, fn(attr)): {q!r}")
-        value = execute_stream(engine, args[0])
         agg = _AGG_RE.match(args[1].strip())
         if not agg:
             raise ValueError(f"bad streaming aggregate: {args[1]!r}")
+        # rolling fast path: a tumbling window aggregated on a real field
+        # never materializes the window — O(1) cumulative-ring partials
+        # (per shard for sharded streams), memoized per window index
+        win = _WINDOW_AGG_RE.match(args[0].strip())
+        agg_fn, target = agg.group(1).lower(), agg.group(2)
+        if win and agg_fn in _COMBINABLE_AGGS:
+            stream = _get_stream(engine, win.group(1))
+            if target == "*":
+                target = stream.fields[0]
+            if target in stream.fields:
+                value = stream.window_aggregate(int(win.group(2)),
+                                                agg_fn, target)
+                return dm.ArrayObject(
+                    {f"{agg_fn}_{target}": jnp.asarray([value])}, ("i",))
+        value = execute_stream(engine, args[0])
         if isinstance(value, dm.Table):
             value = dm.ArrayObject(
                 {n: v for n, v in value.columns.items() if n != "seq"},
@@ -119,7 +145,7 @@ def execute_stream(engine: Engine, query: str):
         target = agg.group(2)
         if target == "*":
             target = next(iter(value.attrs))
-        return value.aggregate(agg.group(1).lower(), target)
+        return value.aggregate(agg_fn, target)
     if fn == "append":
         if len(args) != 2:
             raise ValueError(f"append needs (stream, '<json rows>'): {q!r}")

@@ -221,7 +221,7 @@ def test_transient_stream_error_keeps_cached_plan(bd):
     from repro.core.executor import LocalQueryExecutionException
     bd.register_stream("streamstore0", "ring.stream", ("x",), capacity=16)
     stream = bd.engines["streamstore0"].get("ring.stream")
-    q = "bdstream(aggregate(window(ring.stream, 16), sum(x)))"
+    q = "bdstream(window(ring.stream, 16))"
     stream.append({"x": np.arange(16, dtype=float)})
     assert not bd.query(q).plan_cache_hit          # miss: plan now cached
     stream.append({"x": np.arange(8, dtype=float)})
@@ -231,6 +231,26 @@ def test_transient_stream_error_keeps_cached_plan(bd):
     stream.append({"x": np.arange(8, dtype=float)})    # [16,32) complete
     r = bd.query(q)
     assert r.plan_cache_hit                        # plan survived the error
+
+
+def test_memoized_window_aggregate_survives_eviction(bd):
+    """The rolling fast path keeps the latest complete window's aggregate
+    after the ring evicts the raw rows (the value is already folded), so
+    the standing query keeps its answer; an *uncached* aggregate over the
+    same evicted window still raises — no silent partial windows."""
+    from repro.core.executor import LocalQueryExecutionException
+    bd.register_stream("streamstore0", "ring.stream", ("x",), capacity=16)
+    stream = bd.engines["streamstore0"].get("ring.stream")
+    q = "bdstream(aggregate(window(ring.stream, 16), sum(x)))"
+    stream.append({"x": np.arange(16, dtype=float)})
+    first = bd.query(q)
+    assert float(first.value.attrs["sum_x"][0]) == float(np.arange(16).sum())
+    stream.append({"x": np.arange(8, dtype=float)})    # evicts [0,8)
+    r = bd.query(q)                    # memoized: same window, same value
+    assert float(r.value.attrs["sum_x"][0]) == \
+        float(first.value.attrs["sum_x"][0])
+    with pytest.raises(LocalQueryExecutionException):  # not memoized
+        bd.query("bdstream(aggregate(window(ring.stream, 16), max(x)))")
 
 
 def test_drops_charged_only_to_streams_the_query_reads(bd):

@@ -1,0 +1,123 @@
+"""Docs-consistency gate: extract every fenced ``bql`` / ``python``
+example from docs/BQL.md and execute it against an in-memory deployment,
+so the documentation cannot silently rot (wired into CI).
+
+  PYTHONPATH=src python tools/check_docs.py [--docs docs/BQL.md]
+
+Harness contract (documented at the top of docs/BQL.md):
+
+- ``bql`` blocks: each blank-line-separated statement is one query sent
+  through ``bd.query(...)``; it must parse, execute, and return a value.
+- ``python`` blocks: executed with ``bd`` and ``np`` in scope (assertions
+  inside them are part of the gate).
+
+Blocks run in document order against one shared deployment, so examples
+may rely on the fixture state below plus any earlier example's effects.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+import traceback
+from typing import List, Tuple
+
+import numpy as np
+
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+
+def extract_blocks(text: str) -> List[Tuple[str, int, str]]:
+    """[(language, first line number, block body)] for fenced blocks."""
+    blocks, lang, start, buf = [], None, 0, []
+    for i, line in enumerate(text.splitlines(), 1):
+        m = _FENCE_RE.match(line)
+        if m and lang is None:
+            lang, start, buf = m.group(1).lower(), i + 1, []
+        elif line.strip() == "```" and lang is not None:
+            blocks.append((lang, start, "\n".join(buf)))
+            lang = None
+        elif lang is not None:
+            buf.append(line)
+    return blocks
+
+
+def build_fixture():
+    """The deployment the documented examples run against (keep in sync
+    with the fixture description in docs/BQL.md)."""
+    from repro.core.api import default_deployment
+    from repro.data.mimic import load_mimic_demo
+
+    bd = default_deployment()
+    load_mimic_demo(bd, num_patients=16, num_orders=64, wave_len=256,
+                    num_logs=16)
+    vitals = bd.register_stream("streamstore0", "vitals.stream", ("hr",),
+                                capacity=64)
+    vitals.append({"hr": [72.0, 75.0, 71.0, 78.0]})
+    seq = np.arange(64, dtype=np.float64)
+    waves = bd.register_stream("streamstore0",
+                               "mimic2v26.waveform_stream",
+                               ("signal", "hr"), capacity=1024,
+                               shards=2, block_rows=8)
+    waves.append({"signal": np.sin(2 * np.pi * seq / 360.0),
+                  "hr": 75.0 + seq % 7})
+    return bd
+
+
+def statements(block: str) -> List[str]:
+    """Statements of a bql block: separated by blank lines or comment
+    lines (a comment must never bridge two statements into one)."""
+    stmts, buf = [], []
+    for line in block.splitlines() + [""]:
+        if line.strip() and not line.strip().startswith("#"):
+            buf.append(line)
+        elif buf:
+            stmts.append("\n".join(buf).strip())
+            buf = []
+    return stmts
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", default="docs/BQL.md")
+    args = ap.parse_args()
+    with open(args.docs) as fh:
+        text = fh.read()
+    blocks = extract_blocks(text)
+    runnable = [(lang, ln, body) for lang, ln, body in blocks
+                if lang in ("bql", "python")]
+    if not runnable:
+        print(f"FAIL: no runnable bql/python blocks in {args.docs}")
+        return 1
+
+    bd = build_fixture()
+    namespace = {"bd": bd, "np": np}
+    ran, failures = 0, []
+    for lang, line_no, body in runnable:
+        if lang == "python":
+            try:
+                exec(compile(body, f"{args.docs}:{line_no}", "exec"),
+                     namespace)
+                ran += 1
+            except Exception:                          # noqa: BLE001
+                failures.append((line_no, body, traceback.format_exc()))
+            continue
+        for stmt in statements(body):
+            flat = " ".join(stmt.split())
+            try:
+                response = bd.query(flat)
+                assert response.value is not None, "query returned None"
+                ran += 1
+            except Exception:                          # noqa: BLE001
+                failures.append((line_no, flat, traceback.format_exc()))
+
+    for line_no, snippet, tb in failures:
+        print(f"\nFAIL {args.docs}:{line_no}\n  {snippet}\n{tb}")
+    status = "FAIL" if failures else "OK"
+    print(f"{status}: {ran} documented examples executed, "
+          f"{len(failures)} failed ({args.docs})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
