@@ -1,19 +1,113 @@
 """Benchmark harness (deliverable (d)): one module per paper table/figure
 plus migration matrix, kernels, planner/monitor, and the dry-run roofline
 reader.  Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` also
-writes a machine-readable report (uploaded as the CI bench-smoke artifact).
+writes a machine-readable report (uploaded as the CI bench-smoke
+artifact, named ``BENCH_<sha>.json`` there — the bench trajectory).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...] [--json out.json]
+
+Perf-regression gate: ``--compare BASELINE.json --tolerance 0.25`` diffs
+the current run's per-row **medians** (collect several with
+``--samples N``; rows repeating a name within one report are pooled)
+against a committed baseline report and exits non-zero when any common
+row's median exceeds ``baseline * (1 + tolerance)`` — so speedups and
+regressions stop being invisible in CI.  ``--write-baseline PATH``
+refreshes the committed baseline from the current run.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import statistics
 import sys
 import traceback
+from typing import Any, Dict, List, Tuple
 
 SUITES = ("fig5", "fig6", "migration", "kernels", "planner", "stream",
           "roofline")
+
+
+def _run_suite(name: str, runs: int) -> List[Tuple[str, float, str]]:
+    if name == "fig5":
+        from benchmarks import paper_fig5
+        return paper_fig5.run(runs=runs)
+    if name == "fig6":
+        from benchmarks import paper_fig6
+        return paper_fig6.run(runs=runs)
+    if name == "migration":
+        from benchmarks import migration_matrix
+        return migration_matrix.run()
+    if name == "kernels":
+        from benchmarks import kernel_bench
+        return kernel_bench.run()
+    if name == "planner":
+        from benchmarks import planner_monitor
+        return planner_monitor.run()
+    if name == "stream":
+        from benchmarks import stream_bench
+        return stream_bench.run()
+    if name == "roofline":
+        from benchmarks import roofline
+        return roofline.run()
+    raise ValueError(f"unknown suite {name!r}")
+
+
+def _row_pools(report: Dict[str, Any]
+               ) -> Dict[Tuple[str, str], List[float]]:
+    """(suite, row name) -> every us_per_call occurrence in the report
+    (multiple ``--samples`` passes repeat row names)."""
+    pools: Dict[Tuple[str, str], List[float]] = {}
+    for suite, rows in report.get("suites", {}).items():
+        for row in rows:
+            pools.setdefault((suite, row["name"]), []).append(
+                float(row["us_per_call"]))
+    return pools
+
+
+def report_medians(report: Dict[str, Any]) -> Dict[Tuple[str, str], float]:
+    """(suite, row name) -> median us_per_call over every occurrence."""
+    return {k: statistics.median(v)
+            for k, v in _row_pools(report).items()}
+
+
+def compare_reports(baseline: Dict[str, Any], current: Dict[str, Any],
+                    tolerance: float = 0.25) -> Dict[str, Any]:
+    """Diff two ``--json`` reports by per-row median us_per_call.
+
+    A row *regresses* when its current **median** exceeds the baseline
+    median by more than ``tolerance`` (relative) AND its best (minimum)
+    sample does too: a genuine code regression elevates every sample,
+    while scheduler noise on micro-rows usually leaves at least one
+    sample near baseline — so one lucky sample vetoes a false alarm but
+    cannot hide a real slowdown.  Rows faster by the same margin are
+    reported as improvements.  Only rows present in both reports are
+    compared — renamed or new rows can't fail the gate, but they are
+    listed so a silently vanished benchmark is visible."""
+    base = report_medians(baseline)
+    cur = report_medians(current)
+    cur_pools = _row_pools(current)
+    rows, regressions, improvements = [], [], []
+    for key in sorted(base.keys() & cur.keys()):
+        b, c = base[key], cur[key]
+        ratio = c / b if b > 0 else float("inf")
+        cutoff = b * (1.0 + tolerance)
+        regressed = c > cutoff and min(cur_pools[key]) > cutoff
+        improved = c < b * (1.0 - tolerance)
+        name = f"{key[0]}/{key[1]}" if not key[1].startswith(key[0]) \
+            else key[1]
+        rows.append({"suite": key[0], "name": key[1],
+                     "baseline_us": round(b, 3), "current_us": round(c, 3),
+                     "ratio": round(ratio, 4), "regressed": regressed})
+        if regressed:
+            regressions.append(name)
+        elif improved:
+            improvements.append(name)
+    return {"tolerance": tolerance, "rows": rows,
+            "regressions": regressions, "improvements": improvements,
+            "only_in_baseline": sorted(
+                f"{s}/{n}" for s, n in base.keys() - cur.keys()),
+            "only_in_current": sorted(
+                f"{s}/{n}" for s, n in cur.keys() - base.keys())}
 
 
 def main() -> None:
@@ -22,56 +116,81 @@ def main() -> None:
                     help="comma-separated subset of " + ",".join(SUITES))
     ap.add_argument("--runs", type=int, default=50,
                     help="repetitions for fig5/fig6 (paper uses 50)")
+    ap.add_argument("--samples", type=int, default=1,
+                    help="full passes over the selected suites; per-row "
+                         "medians pool across passes (use >1 with "
+                         "--compare for stable medians)")
     ap.add_argument("--json", type=str, default=None,
                     help="also write results as JSON to this path")
+    ap.add_argument("--compare", type=str, default=None,
+                    help="baseline report JSON to diff medians against; "
+                         "exits non-zero on any regression")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative regression tolerance for --compare "
+                         "(0.25 = fail rows >25%% over baseline)")
+    ap.add_argument("--write-baseline", type=str, default=None,
+                    help="write this run's report as a fresh baseline")
     args = ap.parse_args()
     selected = args.only.split(",") if args.only else list(SUITES)
 
     print("name,us_per_call,derived")
-    report = {"suites": {}, "meta": {}, "failures": []}
-    for name in selected:
-        try:
-            if name == "fig5":
-                from benchmarks import paper_fig5
-                rows = paper_fig5.run(runs=args.runs)
-            elif name == "fig6":
-                from benchmarks import paper_fig6
-                rows = paper_fig6.run(runs=args.runs)
-            elif name == "migration":
-                from benchmarks import migration_matrix
-                rows = migration_matrix.run()
-            elif name == "kernels":
-                from benchmarks import kernel_bench
-                rows = kernel_bench.run()
-            elif name == "planner":
-                from benchmarks import planner_monitor
-                rows = planner_monitor.run()
-            elif name == "stream":
-                from benchmarks import stream_bench
-                rows = stream_bench.run()
-                # shard/engine config rides along so BENCH_*.json
-                # trajectories stay comparable across shard configs
-                report["meta"]["stream"] = dict(stream_bench.LAST_META)
-            elif name == "roofline":
-                from benchmarks import roofline
-                rows = roofline.run()
-            else:
+    report: Dict[str, Any] = {"suites": {}, "meta": {}, "failures": []}
+    for _ in range(max(1, args.samples)):
+        for name in selected:
+            if name not in SUITES:
                 print(f"unknown suite {name}", file=sys.stderr)
                 continue
-            report["suites"][name] = [
-                {"name": row_name, "us_per_call": us, "derived": derived}
-                for row_name, us, derived in rows]
-            for row_name, us, derived in rows:
-                print(f"{row_name},{us:.1f},{derived}")
-        except Exception:                                 # noqa: BLE001
-            report["failures"].append(
-                {"suite": name, "traceback": traceback.format_exc()})
-            traceback.print_exc()
+            try:
+                rows = _run_suite(name, args.runs)
+                if name == "stream":
+                    # shard/engine config rides along so BENCH_*.json
+                    # trajectories stay comparable across shard configs
+                    from benchmarks import stream_bench
+                    report["meta"]["stream"] = dict(stream_bench.LAST_META)
+                report["suites"].setdefault(name, []).extend(
+                    {"name": row_name, "us_per_call": us,
+                     "derived": derived}
+                    for row_name, us, derived in rows)
+                for row_name, us, derived in rows:
+                    print(f"{row_name},{us:.1f},{derived}")
+            except Exception:                             # noqa: BLE001
+                report["failures"].append(
+                    {"suite": name, "traceback": traceback.format_exc()})
+                traceback.print_exc()
+
+    comparison = None
+    if args.compare:
+        with open(args.compare) as fh:
+            baseline = json.load(fh)
+        comparison = compare_reports(baseline, report,
+                                     tolerance=args.tolerance)
+        report["compare"] = dict(comparison, baseline=args.compare)
+        for row in comparison["rows"]:
+            flag = "REGRESSED" if row["regressed"] else "ok"
+            print(f"compare,{row['suite']}/{row['name']},"
+                  f"{row['ratio']:.2f}x,{flag}", file=sys.stderr)
+        if comparison["regressions"]:
+            print(f"PERF REGRESSION (> {args.tolerance:.0%} over "
+                  f"{args.compare}): "
+                  + ", ".join(comparison["regressions"]),
+                  file=sys.stderr)
+        else:
+            print(f"perf gate OK: {len(comparison['rows'])} rows within "
+                  f"{args.tolerance:.0%} of {args.compare}"
+                  + (f" (improved: "
+                     f"{', '.join(comparison['improvements'])})"
+                     if comparison["improvements"] else ""),
+                  file=sys.stderr)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(report, fh, indent=1)
+    if args.write_baseline:
+        with open(args.write_baseline, "w") as fh:
+            json.dump(report, fh, indent=1)
     if report["failures"]:
         sys.exit(1)
+    if comparison is not None and comparison["regressions"]:
+        sys.exit(2)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,11 @@
 """Streaming island benchmarks (paper §III / arXiv:1609.07548 S-Store):
 ingest throughput into the ring buffer (single stream vs hash-partitioned
 shards across multiple StreamEngines), gathered-window bit-identity vs
-the unsharded baseline, the rolling window-aggregate fast path, standing-
-query tick latency vs window size (2nd+ ticks ride the signature plan
-cache), and the staged window->table route.  Rows land in
+the unsharded baseline, the rolling window-aggregate fast path, event-
+time rows (out-of-order ingest through the insertion buffer/watermark
+path, and the cross-stream interval join over co-located shards),
+standing-query tick latency vs window size (2nd+ ticks ride the
+signature plan cache), and the staged window->table route.  Rows land in
 ``benchmarks.run --json`` so CI's bench-smoke artifact records ingest
 rows/sec and per-tick latency; the shard/engine configuration is exported
 via ``LAST_META`` so BENCH_*.json trajectories stay comparable across
@@ -144,6 +146,50 @@ def run(batch_rows: int = 512, num_batches: int = 16,
         "sharded_speedup": round(rate_n / rate1, 3),
         "gather_bit_identical": identical,
     })
+
+    # -- event time: out-of-order ingest + watermarked cross-stream join -----
+    # two jittered feeds over a shared ts axis; rows arrive shuffled by a
+    # bounded network jitter, park in the insertion buffer, and flush in
+    # ts order once the watermark passes — then an interval join pairs
+    # the two streams' rows (the partial path: co-located shard pairs)
+    bd_ev = default_deployment()
+    ev_rows, ev_jitter = 4096, 8.0
+    left = bd_ev.register_stream("streamstore0", "bench.abp",
+                                 ("ts", "abp"), capacity=2 * ev_rows,
+                                 shards=2, num_engines=2,
+                                 ts_field="ts", max_delay=2.5 * ev_jitter)
+    right = bd_ev.register_stream("streamstore0", "bench.ecg",
+                                  ("ts", "ecg"), capacity=2 * ev_rows,
+                                  shards=2, num_engines=2,
+                                  ts_field="ts", max_delay=2.5 * ev_jitter)
+    ts = np.arange(ev_rows, dtype=np.float64)
+    order = np.argsort(ts + rng.uniform(-ev_jitter, ev_jitter, ev_rows))
+    t0 = time.perf_counter()
+    for a in range(0, ev_rows, 512):
+        sl = order[a:a + 512]
+        left.append({"ts": ts[sl], "abp": 90.0 + np.sin(ts[sl])})
+        right.append({"ts": ts[sl] + 0.25, "ecg": np.cos(ts[sl])})
+    left.flush()
+    right.flush()
+    ingest_ev_s = time.perf_counter() - t0
+    rows.append(("stream/ingest_event_time",
+                 ingest_ev_s / (ev_rows / 512) * 1e6,
+                 f"rows_per_sec={2 * ev_rows / ingest_ev_s:.0f}_"
+                 f"jitter={ev_jitter}_late={left.total_late}"))
+    join_q = ("bdstream(join(ewindow(bench.abp, 512),"
+              " ewindow(bench.ecg, 512), on=ts, tol=0.5))")
+    bd_ev.query(join_q)                   # warm plan cache + jnp dispatch
+    join_ts = []
+    for _ in range(ticks_per_window):
+        t0 = time.perf_counter()
+        r = bd_ev.query(join_q)
+        join_ts.append(time.perf_counter() - t0)
+    pairs = int(np.asarray(r.value.columns["dt"]).shape[0])
+    rows.append(("stream/join_ew512", float(np.median(join_ts)) * 1e6,
+                 f"pairs={pairs}_tol=0.5_shards=2_colocated=True"))
+    LAST_META.update({"event_time_jitter": ev_jitter,
+                      "event_time_late": left.total_late,
+                      "join_pairs": pairs})
 
     # -- standing-query tick latency vs window size --------------------------
     # fresh deployment per window size so each plan-cache line is clean

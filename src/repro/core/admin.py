@@ -4,6 +4,7 @@ of a BigDAWG setup.  Programmatic API + a small CLI:
   PYTHONPATH=src python -m repro.core.admin status
   PYTHONPATH=src python -m repro.core.admin streams    # live streaming demo
   PYTHONPATH=src python -m repro.core.admin rebalance  # shard-move demo
+  PYTHONPATH=src python -m repro.core.admin joins      # event-time join demo
 
 See docs/OPERATIONS.md for the status() JSON schema and every knob.
 """
@@ -53,6 +54,10 @@ def status(bd: BigDawg) -> Dict[str, Any]:
     out["streams"] = bd.streams.status()
     out["streams"]["monitor_ewma_ms"] = {
         k: round(v * 1e3, 3) for k, v in bd.monitor.stream_ewma.items()}
+    # event-time health: per-stream low watermark + late/pending rows
+    # (the Monitor's copy, fed every tick — matches each stream's stats)
+    out["streams"]["watermarks"] = {
+        k: dict(v) for k, v in bd.monitor.stream_watermarks.items()}
     out["plan_cache"] = dict(bd.planner.plan_cache.stats(),
                              capacity=cfg.cache_size,
                              max_age_seconds=cfg.cache_max_age_seconds)
@@ -101,7 +106,7 @@ def main() -> None:
     ap = argparse.ArgumentParser(description="BigDAWG admin interface")
     ap.add_argument("command",
                     choices=("status", "demo-status", "streams",
-                             "rebalance"))
+                             "rebalance", "joins"))
     ap.add_argument("--ticks", type=int, default=8,
                     help="feed batches for the streams/rebalance commands")
     ap.add_argument("--shards", type=int, default=4,
@@ -164,6 +169,29 @@ def main() -> None:
             "shards_before": before, "rebalance": outcome,
             "shards_after": after,
             "standing_query": st["streams"]["queries"]["hr_avg"],
+        }, indent=1))
+        return
+    elif args.command == "joins":
+        # event-time demo: two jittered out-of-order MIMIC waveform
+        # streams (ABP + ECG) with a standing cross-stream interval join
+        # that ticks only when the low watermark advances
+        from repro.data.mimic import stream_mimic_paired_waveforms
+        cq = bd.register_continuous(
+            "bdstream(join(ewindow(mimic2v26.abp_stream, 16),"
+            " ewindow(mimic2v26.ecg_stream, 16), on=ts, tol=0.5))",
+            every_n_ticks=1, name="abp_ecg_join")
+        last = None
+        for info in stream_mimic_paired_waveforms(bd,
+                                                  num_batches=args.ticks):
+            last = info
+        st = status(bd)
+        joined = cq.last_value
+        print(json.dumps({
+            "feed_tail": last,
+            "standing_join": st["streams"]["queries"]["abp_ecg_join"],
+            "watermarks": st["streams"]["watermarks"],
+            "joined_rows": (0 if joined is None
+                            else len(joined.columns["dt"])),
         }, indent=1))
         return
     elif args.command == "streams":

@@ -104,7 +104,9 @@ class BigDawg:
                         capacity: int = 4096, shards: int = 1,
                         shard_key: Optional[str] = None,
                         num_engines: Optional[int] = None,
-                        rolling: bool = True, block_rows: int = 64):
+                        rolling: bool = True, block_rows: int = 64,
+                        ts_field: Optional[str] = None,
+                        max_delay: float = 0.0):
         """Create a ring-buffer stream and register it in the catalog (so
         the Planner can place streaming nodes).
 
@@ -117,13 +119,21 @@ class BigDawg:
         engine, so BQL ops stay shard-transparent.  ``capacity`` is the
         logical total, split evenly across shards.  ``shard_key`` hashes
         rows by that field's value instead of round-robin seq blocks.
+
+        ``ts_field`` declares one of ``fields`` as the event-time axis:
+        the stream then accepts out-of-order ingest bounded by
+        ``max_delay`` (rows park in an insertion buffer until the low
+        watermark passes them; later arrivals are dropped as late) and
+        answers ``ewindow``/``join`` BQL ops.  Without it, semantics are
+        exactly the append-ordered streams of before.
         """
         from repro.stream.engine import (SEQ_FIELD, ShardedStream, Stream,
                                          StreamEngine)
         assert isinstance(self.engines[engine_name], StreamEngine), \
             engine_name
         if shards <= 1:
-            stream = Stream(name, fields, capacity, rolling=rolling)
+            stream = Stream(name, fields, capacity, rolling=rolling,
+                            ts_field=ts_field, max_delay=max_delay)
             self.register_object(engine_name, name, stream,
                                  fields=tuple(fields))
             return stream
@@ -143,7 +153,8 @@ class BigDawg:
                                  fields=shard.fields)
             pairs.append((ename, shard))
         handle = ShardedStream(name, fields, pairs, shard_key=shard_key,
-                               block_rows=block_rows)
+                               block_rows=block_rows, ts_field=ts_field,
+                               max_delay=max_delay)
         # the handle lives on every participating engine AND the caller's
         # anchor engine (shards always spread over streamstore0..spread-1,
         # but engine_name must still resolve the logical stream)

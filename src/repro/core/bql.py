@@ -1,9 +1,16 @@
-"""BigDAWG Query Language (paper §VI): functional syntax with five tokens —
-``bdrel`` / ``bdarray`` / ``bdtext`` for intra-island queries, ``bdcast`` for
-inter-island migration (always nested between island queries), ``bdcatalog``
-for metadata.  This module parses BQL into a CrossIslandQueryPlan tree
-(paper §V.B): nodes either carry an intra-island query or an inter-island
-migration.
+"""BigDAWG Query Language (paper §VI): functional syntax with island
+tokens — ``bdrel`` / ``bdarray`` / ``bdtext`` / ``bdstream`` for
+intra-island queries, ``bdcast`` for inter-island migration (always
+nested between island queries), ``bdcatalog`` for metadata.  This module
+parses BQL into a CrossIslandQueryPlan tree (paper §V.B): nodes either
+carry an intra-island query or an inter-island migration.
+
+Island query text is opaque to this parser (each island's shim owns its
+own grammar) — which is why the streaming island's keyword-argument ops
+(``join(W1, W2, on=ts, tol=0.5)``) and event-time windows
+(``ewindow(S, span)``) need no grammar changes here: ``=`` and nested
+calls pass through ``_split_top_commas`` untouched, and only ``bdcast``
+boundaries are rewritten.
 """
 from __future__ import annotations
 

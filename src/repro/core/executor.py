@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
 import re
 import time
 from concurrent.futures import (FIRST_COMPLETED, Future, ThreadPoolExecutor,
@@ -47,9 +48,16 @@ class PlanAbortedException(Exception):
 
 @dataclasses.dataclass(frozen=True)
 class ExecutorConfig:
-    """Concurrency knobs (threaded through api.BigDawg / serve.engine)."""
+    """Concurrency knobs (threaded through api.BigDawg / serve.engine).
+
+    ``max_workers`` defaults from ``REPRO_MAX_WORKERS`` so whole test
+    runs can be re-executed under a different thread budget without code
+    changes (CI's flake-hunter job runs the stream/executor suites at 8
+    workers to shake out lock-order and watermark races)."""
     mode: str = "concurrent"           # "concurrent" | "serial"
-    max_workers: int = 4
+    max_workers: int = dataclasses.field(
+        default_factory=lambda: int(
+            os.environ.get("REPRO_MAX_WORKERS", "4")))
 
 
 # unique temp-object ids, shared process-wide so concurrently executing

@@ -43,8 +43,9 @@ ISLANDS = {
         result_type=list),
     "streaming": Island(
         name="streaming", data_model="append-only bounded row streams",
-        operations=("append", "window", "aggregate", "rate", "snapshot"),
-        # windows materialize as arrays, snapshots/rates as tables
+        operations=("append", "window", "ewindow", "join", "aggregate",
+                    "rate", "snapshot", "watermark", "flush"),
+        # windows materialize as arrays; snapshots/rates/joins as tables
         result_type=(dm.ArrayObject, dm.Table)),
 }
 

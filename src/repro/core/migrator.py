@@ -11,12 +11,14 @@ Routes:
            (KV-cache pages, gradient compression) — a beyond-paper cast.
   stream — live stream-state *move* between StreamEngines: the ring
            buffer's full state (data, cumulative rings, seq watermark,
-           drop counters, rate history) is deep-copied onto the
-           destination and the source copy deleted, so a shard can be
-           rebalanced under a running standing query without losing
-           continuity.  Unlike the other routes this one moves rather
-           than copies — two live replicas of one append-ordered buffer
-           would fork the seq space.
+           drop counters, rate history — and for event-time streams the
+           insertion buffer, low watermark, and late-row counters, so
+           pending out-of-order rows are neither lost nor double-
+           counted) is deep-copied onto the destination and the source
+           copy deleted, so a shard can be rebalanced under a running
+           standing query without losing continuity.  Unlike the other
+           routes this one moves rather than copies — two live replicas
+           of one append-ordered buffer would fork the seq space.
 
 On a TPU mesh the binary route between DenseHBM shardings is a resharding
 collective (device_put to a new NamedSharding) — no host round-trip; the

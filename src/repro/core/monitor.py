@@ -15,7 +15,7 @@ import dataclasses
 import json
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.signatures import Signature
 
@@ -53,6 +53,16 @@ class Monitor:
         # (StreamRuntime.tick feeds this; the admin rebalance hook reads
         # it to spot lopsided placements)
         self.shard_stats: Dict[str, Dict[int, Dict[str, float]]] = {}
+        # per-tick EWMA of each shard's ingest load (appended + 2x
+        # dropped *deltas* between snapshots): the rebalance signal
+        # tracks *current* load, so late-onset skew on a long-balanced
+        # stream surfaces within a few ticks and a donor engine stops
+        # being charged for historical ingest after a move
+        self.shard_ewma: Dict[str, Dict[int, float]] = {}
+        self._shard_prev: Dict[str, Dict[int, Tuple[float, float]]] = {}
+        # per-stream event-time health: low watermark + late/pending
+        # counters (StreamRuntime.tick feeds this for ts streams)
+        self.stream_watermarks: Dict[str, Dict[str, Any]] = {}
 
     # -- benchmark API (paper naming) ----------------------------------------
     def add_benchmarks(self, signature: Signature, lean: bool,
@@ -169,9 +179,11 @@ class Monitor:
 
     # -- continuous-query health (streaming island) ---------------------------
     def observe_stream(self, name: str, latency_seconds: float,
-                       dropped: int = 0, lagging: bool = False) -> None:
+                       dropped: int = 0, lagging: bool = False,
+                       late: int = 0) -> None:
         """Record one standing-query tick: execution latency EWMA plus
-        cumulative drop/backpressure counters (repro.stream feeds this)."""
+        cumulative drop/late/backpressure counters (repro.stream feeds
+        this)."""
         with self._lock:
             prev = self.stream_ewma.get(name)
             self.stream_ewma[name] = (
@@ -179,39 +191,88 @@ class Monitor:
                 else self.EWMA_ALPHA * latency_seconds
                 + (1 - self.EWMA_ALPHA) * prev)
             stats = self.stream_stats.setdefault(
-                name, {"ticks": 0, "dropped": 0, "backpressure": 0})
+                name, {"ticks": 0, "dropped": 0, "backpressure": 0,
+                       "late": 0})
             stats["ticks"] += 1
             stats["dropped"] += int(dropped)
             stats["backpressure"] += int(bool(lagging))
+            stats["late"] += int(late)
+
+    def observe_watermark(self, stream_name: str, watermark: float,
+                          late: int = 0, pending: int = 0) -> None:
+        """Record an event-time stream's low watermark (min across
+        shards for key-hashed sharded streams) plus its late-row and
+        insertion-buffer counters.  JSON-safe: a watermark that has not
+        started is stored as None."""
+        with self._lock:
+            self.stream_watermarks[stream_name] = {
+                "watermark": (None if watermark == float("-inf")
+                              else float(watermark)),
+                "late": int(late), "pending": int(pending)}
 
     @staticmethod
     def shard_load(stats: Dict[str, float]) -> float:
-        """One shard's ingest load: appended rows, weighted up by drops
-        (a dropping shard is oversubscribed even at a middling rate).
-        Shared by lopsided_shards and StreamRuntime.rebalance so the
-        detector and the mover can never disagree."""
+        """One shard's *lifetime* ingest load: appended rows, weighted up
+        by drops (a dropping shard is oversubscribed even at a middling
+        rate).  The seed/fallback for the per-tick EWMA below — current
+        load decisions go through ``shard_loads``."""
         return (float(stats.get("appended", 0))
                 + 2.0 * float(stats.get("dropped", 0)))
 
     def observe_shards(self, stream_name: str,
                        shard_stats: Dict[int, Dict[str, float]]) -> None:
         """Record the latest per-shard ingest/drop snapshot of a sharded
-        stream (appended/dropped/rows/engine per shard)."""
+        stream (appended/dropped/rows/engine per shard) and fold the
+        per-tick load *delta* into each shard's EWMA.  The first snapshot
+        seeds the EWMA with the lifetime load; from then on only new
+        ingest moves it, so a shard that goes quiet decays toward zero
+        within a few ticks instead of carrying its history forever."""
         with self._lock:
-            self.shard_stats[stream_name] = {
-                int(i): dict(st) for i, st in shard_stats.items()}
+            snap = {int(i): dict(st) for i, st in shard_stats.items()}
+            prev = self._shard_prev.get(stream_name, {})
+            ewma = self.shard_ewma.setdefault(stream_name, {})
+            for i, st in snap.items():
+                appended = float(st.get("appended", 0))
+                dropped = float(st.get("dropped", 0))
+                pa, pd = prev.get(i, (0.0, 0.0))
+                # max() guards counter resets (a shard recreated fresh)
+                delta = (max(0.0, appended - pa)
+                         + 2.0 * max(0.0, dropped - pd))
+                old = ewma.get(i)
+                ewma[i] = (delta if old is None
+                           else self.EWMA_ALPHA * delta
+                           + (1 - self.EWMA_ALPHA) * old)
+            self._shard_prev[stream_name] = {
+                i: (float(st.get("appended", 0)),
+                    float(st.get("dropped", 0)))
+                for i, st in snap.items()}
+            self.shard_stats[stream_name] = snap
+
+    def shard_loads(self, stream_name: str) -> Dict[int, float]:
+        """Current per-shard ingest loads: the per-tick EWMA when
+        observations exist, else the lifetime counters of the latest
+        snapshot.  Shared by lopsided_shards and StreamRuntime.rebalance
+        so the detector and the mover can never disagree."""
+        with self._lock:
+            ewma = self.shard_ewma.get(stream_name)
+            if ewma:
+                return dict(ewma)
+            stats = self.shard_stats.get(stream_name, {})
+            return {i: self.shard_load(st) for i, st in stats.items()}
 
     def lopsided_shards(self, stream_name: str, factor: float = 3.0
                         ) -> List[int]:
-        """Shards of ``stream_name`` whose ingest load (appended rows,
-        weighted up by drops — a shard that drops is oversubscribed even
-        if its raw rate is middling) exceeds ``factor`` x the median
-        shard's.  Empty when the stream is unknown or balanced."""
+        """Shards of ``stream_name`` whose *current* ingest load (per-
+        tick EWMA of appended rows, weighted up by drops — a shard that
+        drops is oversubscribed even if its raw rate is middling)
+        exceeds ``factor`` x the median shard's.  Empty when the stream
+        is unknown or balanced.  EWMA, not lifetime counters: late-onset
+        skew on a long-balanced stream is flagged within a few ticks."""
         with self._lock:
             stats = self.shard_stats.get(stream_name)
             if not stats or len(stats) < 2:
                 return []
-            loads = {i: self.shard_load(st) for i, st in stats.items()}
+            loads = self.shard_loads(stream_name)
             vals = sorted(loads.values())
             # lower median: with the upper one, skew becomes invisible
             # whenever half or more of the shards are hot (a 2-shard

@@ -17,7 +17,9 @@ _OP_WORDS = ("select", "filter", "join", "cross_join", "project", "aggregate",
              "limit", "count", "sum", "avg", "min", "max", "where",
              "distinct",
              # streaming island (repro.stream.shim)
-             "append", "window", "rate", "snapshot")
+             "append", "window", "rate", "snapshot",
+             # event-time streaming ops (watermarked windows + joins)
+             "ewindow", "watermark", "flush")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,7 +67,9 @@ def _island_ops(node: bql.IslandQueryNode) -> Dict[str, int]:
 _NAME_RE = re.compile(r"\b([a-zA-Z_][\w\.]*)\b")
 _KEYWORDS = set(_OP_WORDS) | {
     "from", "as", "by", "asc", "desc", "and", "or", "op", "table", "start",
-    "end", "true", "false"}
+    "end", "true", "false",
+    # join kwargs (join(W1, W2, on=ts, tol=0.5)) are not object refs
+    "on", "tol"}
 
 
 def _referenced_objects(node: bql.IslandQueryNode, engines_have=None

@@ -9,7 +9,10 @@ release scripts.
 waveforms arrive continuously in the real workload, so it feeds the same
 synthetic signal batch-by-batch into the streaming island (paper §III's
 S-Store member; see ``repro.stream``), ticking the standing-query runtime
-after every batch.
+after every batch.  ``stream_mimic_paired_waveforms`` adds the
+cross-stream event-time workload: two jittered, out-of-order waveform
+feeds (ABP + ECG) over a shared ``ts`` axis, for watermarked windows and
+interval joins.
 """
 from __future__ import annotations
 
@@ -117,3 +120,75 @@ def stream_mimic_waveforms(bd: BigDawg, *, batch_rows: int = 64,
         yield {"batch": b, **counts,
                "ran": [(cq_name, resp.plan_cache_hit)
                        for cq_name, resp in ran]}
+
+
+def stream_mimic_paired_waveforms(bd: BigDawg, *, batch_rows: int = 48,
+                                  num_batches: int = 24,
+                                  capacity: int = 8192, seed: int = 0,
+                                  jitter: float = 2.0,
+                                  max_delay: float = 6.0,
+                                  shards: int = 2,
+                                  abp_name: str = "mimic2v26.abp_stream",
+                                  ecg_name: str = "mimic2v26.ecg_stream",
+                                  engine_name: str = "streamstore0",
+                                  tick: bool = True) -> Iterator[Dict]:
+    """Jittered two-stream MIMIC waveform feed — the cross-stream
+    event-time workload (paper §III: correlating ABP and ECG alarms).
+
+    Two event-time streams, ``abp`` (arterial blood pressure) and
+    ``ecg``, share one ``ts`` axis at 1 row/tick with the ECG phase-
+    shifted by 0.25.  Delivery is *out of order*: each batch's rows are
+    shuffled by a bounded network jitter (arrival order = order of
+    ``ts + U(-jitter, jitter)``), so insertion buffers and watermarks do
+    real work, while ``jitter < max_delay / 2`` guarantees no row is
+    ever late — the streams reconstruct the exact in-order signal.
+    Yields a per-batch dict with append counts, both watermarks, and the
+    standing queries that ran on that tick; after the final batch both
+    streams are flushed (punctuation) and one more tick runs so standing
+    joins see the last closed window.
+    """
+    assert jitter >= 0 and max_delay > 2 * jitter, (jitter, max_delay)
+    rng = np.random.default_rng(seed)
+    engine = bd.engines[engine_name]
+    streams = {}
+    for sname, phase in ((abp_name, 0.0), (ecg_name, 0.25)):
+        if not engine.has(sname):
+            field = "abp" if sname == abp_name else "ecg"
+            bd.register_stream(engine_name, sname, ("ts", field),
+                               capacity, shards=shards,
+                               ts_field="ts", max_delay=max_delay)
+        streams[sname] = engine.get(sname)
+
+    def _emit(b: int, ran) -> Dict:
+        return {"batch": b,
+                "watermarks": {n: s.watermark
+                               for n, s in streams.items()},
+                "late": {n: s.total_late for n, s in streams.items()},
+                "ran": [(cq_name, resp.plan_cache_hit)
+                        for cq_name, resp in ran]}
+
+    base = 0.0
+    for b in range(num_batches):
+        t = base + np.arange(batch_rows, dtype=np.float64)
+        base += batch_rows
+        order = np.argsort(t + rng.uniform(-jitter, jitter, batch_rows))
+        abp_ts = t[order]
+        abp = (90.0 + 12.0 * np.sin(2 * np.pi * t / 360.0)
+               + 0.5 * rng.standard_normal(batch_rows))[order]
+        counts_abp = streams[abp_name].append({"ts": abp_ts,
+                                               "abp": abp})
+        order = np.argsort(t + rng.uniform(-jitter, jitter, batch_rows))
+        ecg_ts = (t + 0.25)[order]
+        ecg = (np.sin(2 * np.pi * t / 6.0)
+               + 0.1 * rng.standard_normal(batch_rows))[order]
+        counts_ecg = streams[ecg_name].append({"ts": ecg_ts,
+                                               "ecg": ecg})
+        ran = bd.streams.tick() if tick else []
+        yield {**_emit(b, ran), "appended": {
+            abp_name: counts_abp["appended"],
+            ecg_name: counts_ecg["appended"]}}
+    # punctuation: close the tail windows and let standing joins see them
+    for s in streams.values():
+        s.flush()
+    ran = bd.streams.tick() if tick else []
+    yield _emit(num_batches, ran)

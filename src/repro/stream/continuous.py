@@ -18,6 +18,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import re
 import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
@@ -25,6 +26,11 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core import bql, signatures
 
 _CQ_IDS = itertools.count()
+
+# a standing query is event-time-gated when its streaming sub-queries use
+# watermark-driven ops: re-running it before the watermark moves cannot
+# change its answer
+_EVENT_TIME_OPS_RE = re.compile(r"\b(ewindow|join)\s*\(", re.IGNORECASE)
 
 
 @dataclasses.dataclass
@@ -39,7 +45,18 @@ class ContinuousQuery:
     last_error: Optional[str] = None
     drops_seen: int = 0          # ring-buffer rows lost between executions
     backpressure: int = 0        # executions slower than their own cadence
+    # event-time standing queries (ewindow/join over ts streams) run only
+    # when a referenced stream's low watermark advanced — a tick that
+    # couldn't change their answer is skipped, not executed
+    event_time: bool = False
+    wm_skips: int = 0            # due ticks skipped: watermark unchanged
+    late_seen: int = 0           # late rows on referenced streams
     _dropped_at_last_exec: int = 0
+    _late_at_last_exec: int = 0
+    # per-referenced-stream watermarks at the last execution (ref-name ->
+    # watermark): the gate re-runs when ANY advances — a join must re-run
+    # when one side's window closes even while the other side stalls
+    _wm_at_last_exec: Optional[Dict[str, float]] = None
     _last_exec_start: float = 0.0
     _root: Any = None            # parsed plan tree (set at registration)
     # memoized stream-name resolution for _dropped_for: the referenced
@@ -61,6 +78,9 @@ class ContinuousQuery:
                 "last_error": self.last_error,
                 "drops_seen": self.drops_seen,
                 "backpressure": self.backpressure,
+                "event_time": self.event_time,
+                "wm_skips": self.wm_skips,
+                "late_seen": self.late_seen,
                 "last_latency_ms": round(
                     self.last_latency_seconds * 1e3, 3),
                 "p50_latency_ms": round(p50 * 1e3, 3)}
@@ -117,8 +137,15 @@ class StreamRuntime:
             cq = ContinuousQuery(name=cq_name, bql=query,
                                  every_n_ticks=every_n_ticks)
             cq._root = root
-            # only count drops that happen within this query's lifetime
+            cq.event_time = any(
+                isinstance(node, bql.IslandQueryNode)
+                and node.island == "streaming"
+                and _EVENT_TIME_OPS_RE.search(node.query)
+                for node in root.walk())
+            # only count drops/lates that happen within this query's
+            # lifetime
             cq._dropped_at_last_exec = self._dropped_for(cq)
+            cq._late_at_last_exec = self._late_for(cq)
             self.queries[cq_name] = cq
             return cq
 
@@ -127,16 +154,21 @@ class StreamRuntime:
             self.queries.pop(name, None)
 
     # -- the tick loop --------------------------------------------------------
-    def _dropped_for(self, cq: ContinuousQuery) -> int:
-        """Cumulative ring-buffer drops on the streams this query's BQL
-        actually reads (a query over a stable stream must not be charged
-        with another stream's overflow).  The parse-tree walk + name
-        regex only reruns when the deployment's stream set changes."""
+    def _streams_map(self) -> Dict[str, Any]:
+        """Every stream any StreamEngine serves (plain rings, shard
+        rings, and sharded handles — handles deduped by name)."""
         from repro.stream.engine import StreamEngine
         streams: Dict[str, Any] = {}
         for engine in self.engines.values():
             if isinstance(engine, StreamEngine):
                 streams.update(engine.streams())
+        return streams
+
+    def _refs_for(self, cq: ContinuousQuery,
+                  streams: Dict[str, Any]) -> Tuple[str, ...]:
+        """The stream names this query's BQL actually reads.  The
+        parse-tree walk + name regex only reruns when the deployment's
+        stream set changes."""
         names = frozenset(streams)
         if cq._stream_set != names:
             refs = set()
@@ -147,7 +179,40 @@ class StreamRuntime:
                         node, engines_have=lambda tok: tok in streams))
             cq._stream_refs = tuple(sorted(refs & names))
             cq._stream_set = names
-        return sum(streams[r].total_dropped for r in cq._stream_refs)
+        return cq._stream_refs
+
+    def _dropped_for(self, cq: ContinuousQuery,
+                     streams: Optional[Dict[str, Any]] = None) -> int:
+        """Cumulative ring-buffer drops on the streams this query reads
+        (a query over a stable stream must not be charged with another
+        stream's overflow)."""
+        if streams is None:
+            streams = self._streams_map()
+        return sum(streams[r].total_dropped
+                   for r in self._refs_for(cq, streams))
+
+    def _late_for(self, cq: ContinuousQuery,
+                  streams: Optional[Dict[str, Any]] = None) -> int:
+        """Cumulative late rows (arrived below the watermark, dropped)
+        on the streams this query reads — data an event-time standing
+        query can never see."""
+        if streams is None:
+            streams = self._streams_map()
+        return sum(getattr(streams[r], "total_late", 0)
+                   for r in self._refs_for(cq, streams))
+
+    def _watermarks_for(self, cq: ContinuousQuery,
+                        streams: Optional[Dict[str, Any]] = None
+                        ) -> Optional[Dict[str, float]]:
+        """Low watermark of every event-time stream this query reads
+        (name -> watermark), or None when it reads none (the query is
+        then not watermark-gated)."""
+        if streams is None:
+            streams = self._streams_map()
+        marks = {r: streams[r].watermark
+                 for r in self._refs_for(cq, streams)
+                 if getattr(streams[r], "ts_field", None) is not None}
+        return marks or None
 
     def tick(self) -> List[Tuple[str, Any]]:
         """Advance one tick; run every due standing query in lean mode.
@@ -169,7 +234,27 @@ class StreamRuntime:
             due = [cq for cq in self.queries.values()
                    if self.ticks % cq.every_n_ticks == 0]
         ran: List[Tuple[str, Any]] = []
+        # one engine->streams snapshot serves every query this tick (the
+        # per-query drop/late/watermark lookups below all read it)
+        streams_map = self._streams_map()
         for cq in due:
+            if cq.event_time:
+                # watermark gating: an ewindow/join answer can only
+                # change when a referenced stream's low watermark moves —
+                # a due tick where NO referenced watermark advanced is
+                # skipped (and counted), not executed into the same
+                # closed windows.  Any single side advancing re-runs a
+                # join: its window may have closed while the other side
+                # stalls
+                marks = self._watermarks_for(cq, streams_map)
+                last = cq._wm_at_last_exec
+                if (marks is not None and last is not None
+                        and all(r in last and wm <= last[r]
+                                for r, wm in marks.items())):
+                    with self._lock:
+                        cq.wm_skips += 1
+                    continue
+                cq._wm_at_last_exec = marks
             # a query's latency budget is its own cadence: the gap since
             # its previous execution (~ every_n_ticks x the tick gap)
             exec_start = time.monotonic()
@@ -189,10 +274,14 @@ class StreamRuntime:
                 continue
             latency = time.perf_counter() - t0
             # rows this query's ring buffers dropped since it last looked
-            # (data the standing query never got to see)
-            dropped_total = self._dropped_for(cq)
+            # (data the standing query never got to see), and late rows
+            # that arrived below the watermark (same: invisible to it)
+            dropped_total = self._dropped_for(cq, streams_map)
             drops = dropped_total - cq._dropped_at_last_exec
             cq._dropped_at_last_exec = dropped_total
+            late_total = self._late_for(cq, streams_map)
+            lates = late_total - cq._late_at_last_exec
+            cq._late_at_last_exec = late_total
             with self._lock:
                 cq.executions += 1
                 cq.last_value = response.value
@@ -201,16 +290,26 @@ class StreamRuntime:
                 if response.plan_cache_hit:
                     cq.cache_hits += 1
                 cq.drops_seen += drops
+                cq.late_seen += lates
                 lagging = budget > 0 and latency > budget
                 if lagging:
                     cq.backpressure += 1
             self.monitor.observe_stream(cq.name, latency, dropped=drops,
-                                        lagging=lagging)
+                                        lagging=lagging, late=lates)
             ran.append((cq.name, response))
         # per-shard ingest/drop snapshots land in the Monitor every tick —
         # the admin rebalance hook reads them to spot lopsided placements
         for name, handle in self._sharded_streams().items():
             self.monitor.observe_shards(name, handle.shard_stats())
+        # per-stream low watermarks land there too (event-time health:
+        # admin.status()["streams"] and the Monitor agree by construction)
+        for name, stream in streams_map.items():
+            if "@shard" in name or getattr(stream, "ts_field",
+                                           None) is None:
+                continue
+            self.monitor.observe_watermark(
+                name, stream.watermark, late=stream.total_late,
+                pending=stream._pending_rows)
         return ran
 
     def run_ticks(self, n: int) -> List[List[Tuple[str, Any]]]:
@@ -318,9 +417,17 @@ class StreamRuntime:
                 f"{to_engine!r} is not a StreamEngine "
                 f"(have: {sorted(stream_engines)})")
         stats = handle.shard_stats()
+        # current per-shard loads (per-tick EWMA — lifetime counters only
+        # before the first tick), so a donor engine is weighed by what
+        # its shards ingest *now*, not by their history
+        shard_loads = self.monitor.shard_loads(stream)
+
+        def _weight(i: int, st: Dict[str, Any]) -> float:
+            return shard_loads.get(i, self.monitor.shard_load(st))
+
         loads: Dict[str, float] = {n: 0.0 for n in stream_engines}
-        for st in stats.values():
-            loads[st["engine"]] += self.monitor.shard_load(st)
+        for i, st in stats.items():
+            loads[st["engine"]] += _weight(i, st)
         if shard is None or to_engine is None:
             # consider every (donor shard, destination) pair — a move off
             # a non-busiest engine can still shrink the spread (e.g. the
@@ -331,7 +438,7 @@ class StreamRuntime:
             for i, st in stats.items():
                 if shard is not None and i != shard:
                     continue
-                w = self.monitor.shard_load(st)
+                w = _weight(i, st)
                 for dest in stream_engines:
                     if to_engine is not None and dest != to_engine:
                         continue

@@ -25,10 +25,24 @@ scatter appends, seq-ordered gather reads — so the BQL ops stay
 shard-transparent.  Shard ring buffers are *live-migratable* between
 StreamEngines (the Migrator's ``stream`` route moves data + seq watermark
 + drop counters) without interrupting standing queries.
+
+Event time (arXiv:1609.07548 makes S-Store the polystore's time-ordered
+engine): a stream declared with ``ts_field`` accepts bounded out-of-order
+ingest.  Arriving rows park in an insertion buffer until the stream's
+**low watermark** — ``max(ts seen) - max_delay``, and the *minimum across
+shards* for key-hashed sharded streams — passes them; they are then
+flushed into the ring in timestamp order, with the global ``seq``
+assigned *at flush time*, so seq order and event-time order coincide and
+every seq-aligned op keeps working.  Rows arriving below the watermark
+are **late**: dropped and counted (``total_late``), never silently
+reordered.  ``ewindow(span[, slide])`` is the event-time window view,
+closed only once the watermark passes its end.  Streams without
+``ts_field`` keep the exact append-ordered semantics of before.
 """
 from __future__ import annotations
 
 import collections
+import math
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -76,6 +90,84 @@ def _memoized_window_aggregate(stream, size: int, fn: str, field: str,
     return value
 
 
+def _latest_closed_ewindow(stream, span: float,
+                           slide: Optional[float]) -> Tuple[float, float]:
+    """(start, end) of the latest *closed* event-time window of ``stream``
+    — windows are aligned to multiples of ``slide`` (default ``span``) on
+    the ts axis, and closed means the low watermark has passed the end.
+    Shared by Stream and ShardedStream; raises while no window is closed
+    or the stream has no event-time field."""
+    span = float(span)
+    step = float(slide) if slide is not None else span
+    if span <= 0 or step <= 0:
+        raise StreamException(
+            f"stream {stream.name!r}: ewindow span/slide must be "
+            f"positive, got ({span}, {step})")
+    if stream.ts_field is None:
+        raise StreamException(
+            f"stream {stream.name!r} has no event-time field "
+            f"(declare it with ts_field=...)")
+    wm = stream.watermark
+    if wm == float("-inf"):
+        raise StreamException(
+            f"stream {stream.name!r}: watermark has not started, "
+            f"no closed ewindow yet")
+    k = math.floor((wm - span) / step)
+    start = k * step
+    while start + span > wm:                  # float-rounding guard
+        k -= 1
+        start = k * step
+    if start + span <= stream.min_ts_seen:
+        # the window axis is unbounded, but a window that ends before
+        # the first row ever seen says nothing about the stream yet
+        raise StreamException(
+            f"stream {stream.name!r}: no closed ewindow covering data "
+            f"yet (watermark {wm}, first ts {stream.min_ts_seen})")
+    return start, start + span
+
+
+def _classify_late(stream, cols: Dict[str, np.ndarray],
+                   n: int) -> Tuple[Dict[str, np.ndarray], int, int]:
+    """Split an arriving batch against ``stream``'s low watermark
+    (caller holds the lock): rows strictly below it can no longer be
+    inserted in timestamp order, so they are dropped and counted on
+    ``total_late``.  Returns (kept columns, kept count, late count).
+    The single definition of lateness — Stream and ShardedStream must
+    never disagree on the boundary (``ts == watermark`` is NOT late:
+    the ring's flushed rows all have ts <= watermark, so an equal row
+    still appends in order)."""
+    ts = cols[stream.ts_field]
+    late_mask = ts < stream.watermark
+    nlate = int(late_mask.sum())
+    if nlate:
+        stream.total_late += nlate
+        keep = ~late_mask
+        cols = {f: v[keep] for f, v in cols.items()}
+    return cols, n - nlate, nlate
+
+
+def _key_owners(values: np.ndarray, num_shards: int) -> np.ndarray:
+    """Shard owner of each row under key-hash partitioning:
+    ``floor(|v|) mod N``.  Non-finite key values (NaN/±inf — missing
+    vitals, sensor saturation) route deterministically to shard 0
+    instead of through the C-undefined float->int64 cast."""
+    return np.floor(np.abs(np.nan_to_num(
+        values, nan=0.0, posinf=0.0, neginf=0.0))
+    ).astype(np.int64) % num_shards
+
+
+def _event_time_stats(stream) -> Dict[str, Any]:
+    """The event-time health block shared by Stream and ShardedStream
+    stats (caller holds the owning lock).  The watermark is reported as
+    None until it starts, keeping status() JSON-serializable."""
+    wm = stream.watermark
+    return {"ts_field": stream.ts_field,
+            "max_delay": stream.max_delay,
+            "watermark": None if wm == float("-inf") else wm,
+            "late": stream.total_late,
+            "pending": stream._pending_rows}
+
+
 def _recent_rate(append_times: "collections.deque[Tuple[float, int]]"
                  ) -> float:
     """Rows/second over the recent (wall_time, rows) append history —
@@ -101,13 +193,35 @@ class Stream:
     """Append-only bounded ring buffer of rows (fixed float64 fields)."""
 
     def __init__(self, name: str, fields: Sequence[str],
-                 capacity: int = 4096, rolling: bool = True) -> None:
+                 capacity: int = 4096, rolling: bool = True,
+                 ts_field: Optional[str] = None,
+                 max_delay: float = 0.0) -> None:
         assert fields, "a stream needs at least one field"
         assert capacity > 0, "capacity must be positive"
         self.name = name
         self.fields: Tuple[str, ...] = tuple(fields)
         self.capacity = int(capacity)
         self.rolling = bool(rolling)
+        # -- event time (optional): rows buffer until the low watermark
+        # (max ts seen - max_delay) passes them, then flush ts-ordered
+        if ts_field is not None:
+            assert ts_field in self.fields, ts_field
+            assert ts_field != SEQ_FIELD
+        assert max_delay >= 0.0
+        self.ts_field = ts_field
+        self.max_delay = float(max_delay)
+        self.watermark = float("-inf")    # low watermark (flush boundary)
+        self.max_ts_seen = float("-inf")
+        self.min_ts_seen = float("inf")   # first event ever accepted
+        self.total_late = 0               # rows arriving below the watermark
+        self._pending: List[Dict[str, np.ndarray]] = []   # insertion buffer
+        self._pending_rows = 0
+        # the ring stays sorted on this field (set for event-time streams
+        # and for the shard rings of an event-time ShardedStream): track
+        # the newest evicted row's value so closed windows that lost rows
+        # to ring overflow raise instead of returning silent partials
+        self._evict_field: Optional[str] = ts_field
+        self._evicted_ts = float("-inf")
         self._cols = {f: np.zeros(self.capacity, np.float64)
                       for f in self.fields}
         # rolling-sum support: _cum[f][pos] is the running total of field
@@ -151,44 +265,133 @@ class Stream:
             raise StreamException("ragged append batch")
         if n == 0:
             with self._lock:
-                return {"appended": 0, "dropped": 0, "rows": self._count}
+                counts = {"appended": 0, "dropped": 0, "rows": self._count}
+                if self.ts_field is not None:
+                    counts.update(late=0, flushed=0,
+                                  pending=self._pending_rows)
+                return counts
+        if self.ts_field is not None:
+            return self._append_event_time(cols, n)
         with self._lock:
-            dropped = max(0, self._count + n - self.capacity)
-            for f in self.fields:
-                src = cols[f][-self.capacity:]        # keep only the tail
-                cum = None
-                if f in self._cum:
-                    cum = np.cumsum(src) + self._running[f]
-                    self._running[f] = float(cum[-1])
-                m = src.shape[0]
-                end = self._next + m
-                if end <= self.capacity:
-                    self._cols[f][self._next:end] = src
-                    if cum is not None:
-                        self._cum[f][self._next:end] = cum
-                else:
-                    first = self.capacity - self._next
-                    self._cols[f][self._next:] = src[:first]
-                    self._cols[f][:end % self.capacity] = src[first:]
-                    if cum is not None:
-                        self._cum[f][self._next:] = cum[:first]
-                        self._cum[f][:end % self.capacity] = cum[first:]
-            self._next = (self._next + min(n, self.capacity)) % self.capacity
-            self._count = min(self.capacity, self._count + n)
-            prev_total = self.total_appended
-            self.total_appended += n
-            self.total_dropped += dropped
-            # re-anchor the cumulative rings once per ring generation
-            # (amortized O(1)/row): without this the running totals grow
-            # for the stream's lifetime and the O(1) range_sum subtraction
-            # loses float64 precision for large-magnitude fields (e.g.
-            # epoch-millisecond timestamps) under steady small batches
-            if (self._cum and self.total_appended // self.capacity
-                    != prev_total // self.capacity):
-                self._reanchor_cums_locked()
+            dropped = self._ingest_locked(cols, n)
             self._append_times.append((time.monotonic(), n))
             return {"appended": n, "dropped": dropped,
                     "rows": self._count}
+
+    def _ingest_locked(self, cols: Dict[str, np.ndarray], n: int) -> int:
+        """Write ``n`` rows into the ring (caller holds the lock).  The
+        single write path: seq-ordered appends land here directly; the
+        event-time path lands here from ``_flush_locked`` with rows
+        already sorted by timestamp.  Returns the overwritten count."""
+        dropped = max(0, self._count + n - self.capacity)
+        if dropped and self._evict_field is not None:
+            # the ring is sorted on the evict field, and so is the
+            # concatenation of (buffered rows, this batch) — the newest
+            # evicted value is at concat offset dropped-1
+            f = self._evict_field
+            if dropped <= self._count:
+                boundary = float(self._ordered(f)[dropped - 1])
+            else:
+                boundary = float(cols[f][dropped - self._count - 1])
+            self._evicted_ts = max(self._evicted_ts, boundary)
+        for f in self.fields:
+            src = cols[f][-self.capacity:]        # keep only the tail
+            cum = None
+            if f in self._cum:
+                cum = np.cumsum(src) + self._running[f]
+                self._running[f] = float(cum[-1])
+            m = src.shape[0]
+            end = self._next + m
+            if end <= self.capacity:
+                self._cols[f][self._next:end] = src
+                if cum is not None:
+                    self._cum[f][self._next:end] = cum
+            else:
+                first = self.capacity - self._next
+                self._cols[f][self._next:] = src[:first]
+                self._cols[f][:end % self.capacity] = src[first:]
+                if cum is not None:
+                    self._cum[f][self._next:] = cum[:first]
+                    self._cum[f][:end % self.capacity] = cum[first:]
+        self._next = (self._next + min(n, self.capacity)) % self.capacity
+        self._count = min(self.capacity, self._count + n)
+        prev_total = self.total_appended
+        self.total_appended += n
+        self.total_dropped += dropped
+        # re-anchor the cumulative rings once per ring generation
+        # (amortized O(1)/row): without this the running totals grow
+        # for the stream's lifetime and the O(1) range_sum subtraction
+        # loses float64 precision for large-magnitude fields (e.g.
+        # epoch-millisecond timestamps) under steady small batches
+        if (self._cum and self.total_appended // self.capacity
+                != prev_total // self.capacity):
+            self._reanchor_cums_locked()
+        return dropped
+
+    # -- event-time ingest ----------------------------------------------------
+    def _append_event_time(self, cols: Dict[str, np.ndarray],
+                           n: int) -> Dict[str, int]:
+        """Bounded out-of-order ingest: rows at or above the low watermark
+        park in the insertion buffer; the watermark then advances to
+        ``max_ts_seen - max_delay`` and everything it passed is flushed
+        into the ring in timestamp order.  Rows below the watermark are
+        late — counted and dropped, never inserted out of order."""
+        with self._lock:
+            cols, kept, nlate = _classify_late(self, cols, n)
+            if kept:
+                self._pending.append(cols)
+                self._pending_rows += kept
+                self.max_ts_seen = max(
+                    self.max_ts_seen, float(cols[self.ts_field].max()))
+                self.min_ts_seen = min(
+                    self.min_ts_seen, float(cols[self.ts_field].min()))
+            flushed, dropped = self._flush_locked(
+                self.max_ts_seen - self.max_delay)
+            self._append_times.append((time.monotonic(), kept))
+            return {"appended": kept, "dropped": dropped, "late": nlate,
+                    "flushed": flushed, "pending": self._pending_rows,
+                    "rows": self._count}
+
+    def _flush_locked(self, new_watermark: float) -> Tuple[int, int]:
+        """Advance the (monotone) watermark and flush every buffered row
+        it passed, sorted by timestamp (stable, so equal-ts rows keep
+        arrival order).  Returns (rows flushed, rows dropped by the
+        ring)."""
+        self.watermark = max(self.watermark, new_watermark)
+        if not self._pending or self.watermark == float("-inf"):
+            return 0, 0
+        cat = {f: np.concatenate([b[f] for b in self._pending])
+               for f in self.fields}
+        ts = cat[self.ts_field]
+        ready = ts <= self.watermark
+        m = int(ready.sum())
+        if m == 0:
+            return 0, 0
+        order = np.argsort(ts[ready], kind="stable")
+        flush_cols = {f: v[ready][order] for f, v in cat.items()}
+        if m < ts.shape[0]:
+            hold = ~ready
+            self._pending = [{f: v[hold] for f, v in cat.items()}]
+        else:
+            self._pending = []
+        self._pending_rows -= m
+        dropped = self._ingest_locked(flush_cols, m)
+        return m, dropped
+
+    def flush(self, to_ts: Optional[float] = None) -> Dict[str, Any]:
+        """Punctuation: force the watermark up to ``to_ts`` (default: the
+        max timestamp seen, flushing the whole insertion buffer).  The
+        escape hatch for idle feeds — without new rows the watermark
+        never advances on its own."""
+        with self._lock:
+            if self.ts_field is None:
+                raise StreamException(
+                    f"stream {self.name!r} has no event-time field")
+            target = self.max_ts_seen if to_ts is None else float(to_ts)
+            flushed, dropped = self._flush_locked(target)
+            return {"flushed": flushed, "dropped": dropped,
+                    "watermark": self.watermark,
+                    "pending": self._pending_rows}
 
     def _reanchor_cums_locked(self) -> None:
         """Rewrite every cumulative slot as a prefix sum over the
@@ -251,6 +454,35 @@ class Stream:
                 attrs[f] = jnp.asarray(
                     np.stack([buf[s:s + size] for s in starts]))
             return dm.ArrayObject(attrs, ("window", "tick"))
+
+    def ewindow(self, span: float,
+                slide: Optional[float] = None) -> dm.ArrayObject:
+        """Latest *closed* event-time window as a 1-D ArrayObject.
+
+        Windows are aligned to multiples of ``slide`` (default: ``span``,
+        i.e. tumbling) on the timestamp axis; a window ``[s, s + span)``
+        is closed only once the low watermark reaches its end, so its
+        contents can no longer change (any row that could still land in
+        it would be late).  Unlike seq windows the row count varies with
+        event density — an empty closed window is legitimate.  Raises
+        until the first window closes, and when the ring has already
+        evicted rows the window covered (no silent partials)."""
+        return self._ewindow_bounds_to_view(
+            *_latest_closed_ewindow(self, span, slide))
+
+    def _ewindow_bounds_to_view(self, start: float,
+                                end: float) -> dm.ArrayObject:
+        with self._lock:
+            if start <= self._evicted_ts:
+                raise StreamException(
+                    f"stream {self.name!r}: ewindow [{start},{end}) "
+                    f"already evicted (rows up to ts "
+                    f"{self._evicted_ts} overwritten)")
+            a, b = self._seq_bounds_locked(self.ts_field, start, end)
+            idx = (self._pos(0) + np.arange(a, b)) % self.capacity
+            attrs = {f: jnp.asarray(self._cols[f][idx])
+                     for f in self.fields}
+            return dm.ArrayObject(attrs, ("tick",))
 
     def rate(self) -> float:
         """Recent ingest rate in rows/second (0.0 with <2 appends)."""
@@ -374,12 +606,26 @@ class Stream:
                 "total_appended": self.total_appended,
                 "total_dropped": self.total_dropped,
                 "append_times": list(self._append_times),
+                # event-time state: the insertion buffer and watermark
+                # must travel with a live move or pending rows are lost
+                "ts_field": self.ts_field,
+                "max_delay": self.max_delay,
+                "watermark": self.watermark,
+                "max_ts_seen": self.max_ts_seen,
+                "min_ts_seen": self.min_ts_seen,
+                "total_late": self.total_late,
+                "pending": [{f: v.copy() for f, v in b.items()}
+                            for b in self._pending],
+                "evict_field": self._evict_field,
+                "evicted_ts": self._evicted_ts,
             }
 
     @classmethod
     def from_state(cls, state: Dict[str, Any]) -> "Stream":
         stream = cls(state["name"], state["fields"], state["capacity"],
-                     rolling=state.get("rolling", True))
+                     rolling=state.get("rolling", True),
+                     ts_field=state.get("ts_field"),
+                     max_delay=state.get("max_delay", 0.0))
         stream._cols = {f: np.asarray(v, np.float64)
                         for f, v in state["cols"].items()}
         stream._cum = {f: np.asarray(v, np.float64)
@@ -390,6 +636,20 @@ class Stream:
         stream.total_appended = int(state["total_appended"])
         stream.total_dropped = int(state["total_dropped"])
         stream._append_times.extend(state["append_times"])
+        stream.watermark = float(state.get("watermark", float("-inf")))
+        stream.max_ts_seen = float(state.get("max_ts_seen",
+                                             float("-inf")))
+        stream.min_ts_seen = float(state.get("min_ts_seen",
+                                             float("inf")))
+        stream.total_late = int(state.get("total_late", 0))
+        stream._pending = [{f: np.asarray(v, np.float64)
+                            for f, v in b.items()}
+                           for b in state.get("pending", [])]
+        stream._pending_rows = sum(
+            b[stream.fields[0]].shape[0] for b in stream._pending)
+        stream._evict_field = state.get("evict_field", stream.ts_field)
+        stream._evicted_ts = float(state.get("evicted_ts",
+                                             float("-inf")))
         return stream
 
     # -- island data-model plumbing ------------------------------------------
@@ -403,9 +663,13 @@ class Stream:
 
     def stats(self) -> Dict[str, float]:
         with self._lock:
-            return {"rows": self._count, "capacity": self.capacity,
-                    "appended": self.total_appended,
-                    "dropped": self.total_dropped}
+            out: Dict[str, Any] = {
+                "rows": self._count, "capacity": self.capacity,
+                "appended": self.total_appended,
+                "dropped": self.total_dropped}
+            if self.ts_field is not None:
+                out.update(_event_time_stats(self))
+            return out
 
 
 class ShardedStream:
@@ -443,7 +707,9 @@ class ShardedStream:
     def __init__(self, name: str, fields: Sequence[str],
                  shards: List[Tuple[str, Stream]],
                  shard_key: Optional[str] = None,
-                 block_rows: int = 64) -> None:
+                 block_rows: int = 64,
+                 ts_field: Optional[str] = None,
+                 max_delay: float = 0.0) -> None:
         assert shards, "a sharded stream needs at least one shard"
         self.name = name
         self.fields: Tuple[str, ...] = tuple(fields)
@@ -455,6 +721,29 @@ class ShardedStream:
         self._engines: List[str] = [e for e, _ in shards]
         self._shards: List[Stream] = [s for _, s in shards]
         self.total_appended = 0           # global sequence high-water mark
+        # -- event time: the coordinator owns the insertion buffer — the
+        # global seq is assigned at flush time in ts order, so shard rings
+        # receive monotone ts bands and stay sorted on both seq and ts
+        if ts_field is not None:
+            assert ts_field in self.fields, ts_field
+        assert max_delay >= 0.0
+        self.ts_field = ts_field
+        self.max_delay = float(max_delay)
+        self.watermark = float("-inf")
+        self.max_ts_seen = float("-inf")
+        self.min_ts_seen = float("inf")
+        self.total_late = 0
+        self._pending: List[Dict[str, np.ndarray]] = []
+        self._pending_arrivals: List[np.ndarray] = []   # tie-break tags
+        self._pending_rows = 0
+        self._arrivals = 0
+        # per-shard max ts seen (key-hashed streams only: the stream's
+        # low watermark is the MINIMUM across shards that have data, so
+        # one lagging shard holds every window open)
+        self._shard_max_ts = [float("-inf")] * len(self._shards)
+        if ts_field is not None:
+            for shard in self._shards:
+                shard._evict_field = ts_field
         self._append_times: "collections.deque[Tuple[float, int]]" = \
             collections.deque(maxlen=64)
         self._agg_cache: Dict[Tuple[str, str, int], Tuple[int, float]] = {}
@@ -511,6 +800,8 @@ class ShardedStream:
         n = cols[self.fields[0]].shape[0]
         if any(v.shape[0] != n for v in cols.values()):
             raise StreamException("ragged append batch")
+        if self.ts_field is not None:
+            return self._append_event_time(cols, n)
         nsh = len(self._shards)
         with self._lock:
             t = self.total_appended
@@ -550,13 +841,7 @@ class ShardedStream:
                     # dominate — compute owners vectorized instead
                     owner = ((t + np.arange(n)) // self.block_rows) % nsh
                 else:
-                    # non-finite key values (NaN/±inf — missing vitals,
-                    # sensor saturation) route deterministically to
-                    # shard 0 instead of through the C-undefined
-                    # float->int64 cast
-                    owner = np.floor(np.abs(np.nan_to_num(
-                        cols[self.shard_key], nan=0.0, posinf=0.0,
-                        neginf=0.0))).astype(np.int64) % nsh
+                    owner = _key_owners(cols[self.shard_key], nsh)
                 parts = []
                 for i in range(nsh):
                     idx = np.nonzero(owner == i)[0]
@@ -581,6 +866,132 @@ class ShardedStream:
             return {"appended": n, "dropped": dropped,
                     "rows": sum(s.num_rows for s in self._shards)}
 
+    # -- event-time ingest: coordinator insertion buffer ----------------------
+    def _append_event_time(self, cols: Dict[str, np.ndarray],
+                           n: int) -> Dict[str, int]:
+        """Bounded out-of-order scatter: rows park in the coordinator's
+        insertion buffer (tagged with arrival order for stable ties) and
+        flush once the stream's low watermark passes them — sorted by
+        timestamp, global seqs assigned in that order, then partitioned
+        to the shard rings, which therefore stay sorted on both seq and
+        ts.  Key-hashed streams track a per-shard max timestamp and take
+        the *minimum* across shards with data as the watermark basis, so
+        one lagging shard holds every window open (use ``flush()`` as
+        punctuation for idle shards)."""
+        with self._lock:
+            cols, kept, nlate = _classify_late(self, cols, n)
+            ts = cols[self.ts_field]
+            if kept:
+                self._pending.append(cols)
+                self._pending_arrivals.append(
+                    np.arange(self._arrivals, self._arrivals + kept))
+                self._arrivals += kept
+                self._pending_rows += kept
+                self.max_ts_seen = max(self.max_ts_seen, float(ts.max()))
+                self.min_ts_seen = min(self.min_ts_seen, float(ts.min()))
+                if self.shard_key is not None:
+                    owner = _key_owners(cols[self.shard_key],
+                                        len(self._shards))
+                    for i in range(len(self._shards)):
+                        sel = owner == i
+                        if sel.any():
+                            self._shard_max_ts[i] = max(
+                                self._shard_max_ts[i],
+                                float(ts[sel].max()))
+            flushed, dropped = self._flush_locked(
+                self._watermark_candidate_locked())
+            self._append_times.append((time.monotonic(), kept))
+            return {"appended": kept, "dropped": dropped, "late": nlate,
+                    "flushed": flushed, "pending": self._pending_rows,
+                    "rows": sum(s.num_rows for s in self._shards)}
+
+    def _watermark_candidate_locked(self) -> float:
+        """The low-watermark basis: ``min`` across shards that hold data
+        for key-hashed streams (a shard that has never seen a row cannot
+        declare other rows late and is excluded until it does), the
+        global max timestamp for round-robin ones (every shard receives
+        interleaved blocks, so the per-shard minima coincide)."""
+        if self.shard_key is None:
+            return self.max_ts_seen - self.max_delay
+        seen = [t for t in self._shard_max_ts if t > float("-inf")]
+        if not seen:
+            return float("-inf")
+        return min(seen) - self.max_delay
+
+    def _flush_locked(self, new_watermark: float) -> Tuple[int, int]:
+        """Advance the monotone watermark; flush every buffered row it
+        passed in (ts, arrival) order, assigning global seqs in that
+        order and scattering to the shard rings."""
+        self.watermark = max(self.watermark, new_watermark)
+        if not self._pending or self.watermark == float("-inf"):
+            return 0, 0
+        cat = {f: np.concatenate([b[f] for b in self._pending])
+               for f in self.fields}
+        arrivals = np.concatenate(self._pending_arrivals)
+        ts = cat[self.ts_field]
+        ready = ts <= self.watermark
+        m = int(ready.sum())
+        if m == 0:
+            return 0, 0
+        order = np.lexsort((arrivals[ready], ts[ready]))
+        flush_cols = {f: v[ready][order] for f, v in cat.items()}
+        if m < ts.shape[0]:
+            hold = ~ready
+            self._pending = [{f: v[hold] for f, v in cat.items()}]
+            self._pending_arrivals = [arrivals[hold]]
+        else:
+            self._pending, self._pending_arrivals = [], []
+        self._pending_rows -= m
+        t = self.total_appended
+        seqs = np.arange(t, t + m, dtype=np.float64)
+        self.total_appended += m
+        nsh = len(self._shards)
+        if self.shard_key is not None:
+            owner = _key_owners(flush_cols[self.shard_key], nsh)
+        else:
+            owner = ((t + np.arange(m)) // self.block_rows) % nsh
+        dropped = 0
+        for i in range(nsh):
+            idx = np.nonzero(owner == i)[0]
+            if not idx.size:
+                continue
+            payload = {f: v[idx] for f, v in flush_cols.items()}
+            payload[SEQ_FIELD] = seqs[idx]
+            dropped += self._shards[i].append(payload)["dropped"]
+        return m, dropped
+
+    def flush(self, to_ts: Optional[float] = None) -> Dict[str, Any]:
+        """Punctuation: force the watermark up to ``to_ts`` (default: the
+        max timestamp seen) — the escape hatch when a shard's key range
+        goes idle and would otherwise hold the min-watermark back."""
+        with self._lock:
+            if self.ts_field is None:
+                raise StreamException(
+                    f"stream {self.name!r} has no event-time field")
+            target = self.max_ts_seen if to_ts is None else float(to_ts)
+            flushed, dropped = self._flush_locked(target)
+            return {"flushed": flushed, "dropped": dropped,
+                    "watermark": self.watermark,
+                    "pending": self._pending_rows}
+
+    def ewindow(self, span: float,
+                slide: Optional[float] = None) -> dm.ArrayObject:
+        """Latest closed event-time window, gathered across shards in
+        global seq order (== event-time order, ties by arrival) — bit-
+        identical to the unsharded stream's ``ewindow`` over the same
+        rows."""
+        start, end = _latest_closed_ewindow(self, span, slide)
+        with self._lock:
+            evicted = max(s._evicted_ts for s in self._shards)
+            if start <= evicted:
+                raise StreamException(
+                    f"stream {self.name!r}: ewindow [{start},{end}) "
+                    f"already evicted (rows up to ts {evicted} "
+                    f"overwritten)")
+            _, cols = self._gather_field_range(self.ts_field, start, end)
+            attrs = {f: jnp.asarray(cols[f]) for f in self.fields}
+            return dm.ArrayObject(attrs, ("tick",))
+
     # -- reads: seq-ordered gather --------------------------------------------
     def _gather(self) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
         """All buffered rows across shards, merged in global seq order
@@ -599,16 +1010,24 @@ class ShardedStream:
 
     def _gather_range(self, s: int, e: int
                       ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
-        """Rows with global seq in [s, e), merged in seq order — each
-        shard contributes only its slice of the range (located by ring
-        binary search), so the cost scales with the window size rather
-        than the total buffered rows (caller holds the coordinator
-        lock)."""
+        """Rows with global seq in [s, e), merged in seq order."""
+        return self._gather_field_range(SEQ_FIELD, float(s), float(e))
+
+    def _gather_field_range(self, field: str, lo: float, hi: float
+                            ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+        """Rows whose ``field`` value lies in [lo, hi), merged in global
+        seq order — each shard contributes only its slice of the range
+        (located by ring binary search), so the cost scales with the
+        window size rather than the total buffered rows.  Works for any
+        field the shard rings are sorted on: the reserved seq column
+        always, and the ts field of an event-time stream (seqs are
+        assigned in ts order at flush).  Caller holds the coordinator
+        lock."""
         seq_parts, col_parts = [], {f: [] for f in self.fields}
         for shard in self._shards:
             with shard._lock:
-                a, b = shard._seq_bounds_locked(SEQ_FIELD, float(s),
-                                                float(e))
+                a, b = shard._seq_bounds_locked(field, float(lo),
+                                                float(hi))
                 if b <= a:
                     continue
                 idx = (shard._pos(0) + np.arange(a, b)) % shard.capacity
@@ -736,6 +1155,15 @@ class ShardedStream:
                 "dropped": self.total_dropped,
                 "shards": self.shard_stats(),
             }
+            if self.ts_field is not None:
+                out.update(_event_time_stats(self))
+                if self.shard_key is not None:
+                    # per-shard watermark views: the stream watermark is
+                    # their minimum (over shards that have data)
+                    out["shard_watermarks"] = {
+                        i: (None if t == float("-inf")
+                            else t - self.max_delay)
+                        for i, t in enumerate(self._shard_max_ts)}
             return out
 
     def shard_stats(self) -> Dict[int, Dict[str, Any]]:
@@ -760,6 +1188,15 @@ class ShardedStream:
         (the Migrator keeps the catalog's placement truthful)."""
         from repro.core.migrator import MigrationParams
         with self._lock:
+            if not 0 <= idx < len(self._shards):
+                raise ValueError(
+                    f"{self.name!r} has no shard {idx} "
+                    f"(0..{len(self._shards) - 1})")
+            if to_engine not in engines:
+                raise ValueError(
+                    f"migration target engine {to_engine!r} does not "
+                    f"exist (shard {idx} of {self.name!r} stays on "
+                    f"{self._engines[idx]})")
             src_name = self._engines[idx]
             if to_engine == src_name:
                 raise ValueError(

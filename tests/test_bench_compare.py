@@ -1,0 +1,96 @@
+"""The perf-regression gate (benchmarks/run.py --compare): median
+diffing against a committed baseline must fail on a synthetic >=25%
+median regression, pass on the baseline itself, pool medians across
+samples, and never let a renamed row silently drop out of the gate."""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.run import compare_reports, report_medians  # noqa: E402
+
+BASELINE = {
+    "suites": {
+        "stream": [
+            {"name": "stream/ingest", "us_per_call": 100.0, "derived": ""},
+            {"name": "stream/join_ew512", "us_per_call": 40.0,
+             "derived": ""},
+        ],
+        "planner": [
+            {"name": "planner/lean_hit", "us_per_call": 10.0,
+             "derived": ""},
+        ],
+    },
+    "meta": {}, "failures": [],
+}
+
+
+def test_baseline_compared_to_itself_passes():
+    cmp = compare_reports(BASELINE, copy.deepcopy(BASELINE),
+                          tolerance=0.25)
+    assert cmp["regressions"] == [] and cmp["improvements"] == []
+    assert len(cmp["rows"]) == 3
+    assert all(r["ratio"] == 1.0 for r in cmp["rows"])
+
+
+def test_synthetic_25pct_median_regression_fails():
+    cur = copy.deepcopy(BASELINE)
+    cur["suites"]["stream"][0]["us_per_call"] = 130.0    # +30% > 25%
+    cmp = compare_reports(BASELINE, cur, tolerance=0.25)
+    assert cmp["regressions"] == ["stream/ingest"]
+    row = next(r for r in cmp["rows"] if r["name"] == "stream/ingest")
+    assert row["regressed"] and row["ratio"] == pytest.approx(1.3)
+
+
+def test_regression_within_tolerance_passes():
+    cur = copy.deepcopy(BASELINE)
+    cur["suites"]["stream"][0]["us_per_call"] = 120.0    # +20% <= 25%
+    cmp = compare_reports(BASELINE, cur, tolerance=0.25)
+    assert cmp["regressions"] == []
+
+
+def test_medians_pool_across_samples_and_shrug_off_outliers():
+    """--samples N repeats row names; the gate diffs medians, so one
+    noisy outlier pass cannot fail the build."""
+    cur = copy.deepcopy(BASELINE)
+    cur["suites"]["stream"] = [
+        {"name": "stream/ingest", "us_per_call": v, "derived": ""}
+        for v in (95.0, 105.0, 900.0)]                   # median 105
+    med = report_medians(cur)
+    assert med[("stream", "stream/ingest")] == 105.0
+    cmp = compare_reports(BASELINE, cur, tolerance=0.25)
+    assert cmp["regressions"] == []
+    # ...but a consistently slow row still fails
+    cur["suites"]["stream"] = [
+        {"name": "stream/ingest", "us_per_call": v, "derived": ""}
+        for v in (140.0, 150.0, 160.0)]
+    assert compare_reports(BASELINE, cur,
+                           tolerance=0.25)["regressions"] \
+        == ["stream/ingest"]
+
+
+def test_improvements_and_row_set_drift_are_reported():
+    cur = copy.deepcopy(BASELINE)
+    cur["suites"]["stream"][1]["us_per_call"] = 10.0     # 4x faster
+    cur["suites"]["stream"][0]["name"] = "stream/ingest_v2"  # renamed
+    cmp = compare_reports(BASELINE, cur, tolerance=0.25)
+    assert cmp["improvements"] == ["stream/join_ew512"]
+    assert cmp["only_in_baseline"] == ["stream/stream/ingest"]
+    assert cmp["only_in_current"] == ["stream/stream/ingest_v2"]
+    assert cmp["regressions"] == []
+
+
+def test_committed_baseline_matches_the_ci_invocation():
+    """benchmarks/BASELINE.json must exist, parse, and cover the suites
+    the bench-smoke job compares (planner, migration, stream)."""
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "BASELINE.json")
+    with open(path) as fh:
+        baseline = json.load(fh)
+    assert {"planner", "migration", "stream"} <= set(baseline["suites"])
+    meds = report_medians(baseline)
+    assert all(v > 0 for v in meds.values())
+    assert any(name == "stream/join_ew512" for _, name in meds)

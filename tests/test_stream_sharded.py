@@ -13,6 +13,7 @@ import pytest
 from repro.core import admin
 from repro.core.api import default_deployment
 from repro.core.migrator import MigrationException, MigrationParams
+from repro.core.monitor import Monitor
 from repro.stream.engine import ShardedStream, Stream, StreamEngine
 
 
@@ -373,6 +374,64 @@ def test_num_engines_respected_in_grown_deployment():
                             capacity=256, shards=4, num_engines=2)
     assert sh.shard_engines() == ["streamstore0", "streamstore1",
                                   "streamstore0", "streamstore1"]
+
+
+def test_lopsided_detection_tracks_current_load_not_lifetime():
+    """Late-onset skew: a long-balanced stream whose traffic suddenly
+    piles onto one shard.  Lifetime appended/dropped counters stay
+    near-balanced (history dominates), so the old detector missed it;
+    the per-tick EWMA flags the newly hot shard within a few ticks, and
+    the formerly busy shard's load decays instead of charging its donor
+    engine forever."""
+    bd = default_deployment()
+    sh = bd.register_stream("streamstore0", "onset.stream", ("k", "v"),
+                            capacity=65536, shards=2, shard_key="k",
+                            num_engines=2)
+    rng = np.random.default_rng(9)
+    # phase 1: 10 balanced ticks (alternating keys -> both shards even)
+    for _ in range(10):
+        sh.append({"k": np.tile([0.0, 1.0], 64),
+                   "v": rng.standard_normal(128)})
+        bd.streams.tick()
+    assert bd.monitor.lopsided_shards("onset.stream") == []
+    # phase 2: traffic flips entirely onto shard 1
+    for _ in range(8):
+        sh.append({"k": np.ones(128), "v": rng.standard_normal(128)})
+        bd.streams.tick()
+    stats = bd.monitor.shard_stats["onset.stream"]
+    lifetime = {i: Monitor.shard_load(st) for i, st in stats.items()}
+    # the lifetime view still looks balanced (under the 3x threshold)...
+    assert lifetime[1] < 3.0 * lifetime[0]
+    # ...but the EWMA sees the current skew and flags shard 1
+    assert bd.monitor.lopsided_shards("onset.stream") == [1]
+    loads = bd.monitor.shard_loads("onset.stream")
+    assert loads[1] > 3.0 * loads[0]
+    # the idle shard's load decayed well below its lifetime ingest —
+    # its engine is no longer charged for historical rows
+    assert loads[0] < 0.2 * lifetime[0]
+
+
+def test_rebalance_uses_current_loads_after_traffic_shift():
+    """The mover and the detector share the EWMA view: after the shift,
+    rebalance moves the *currently* hot shard off its engine even though
+    lifetime counters would call the placement fine."""
+    bd = default_deployment()
+    sh = bd.register_stream("streamstore0", "shift.stream", ("k", "v"),
+                            capacity=65536, shards=4, shard_key="k",
+                            num_engines=2)
+    rng = np.random.default_rng(10)
+    for _ in range(10):                    # balanced history, all shards
+        sh.append({"k": np.tile([0.0, 1.0, 2.0, 3.0], 32),
+                   "v": rng.standard_normal(128)})
+        bd.streams.tick()
+    for _ in range(8):                     # now only shard 1 is hot
+        sh.append({"k": np.ones(256), "v": rng.standard_normal(256)})
+        bd.streams.tick()
+    hot_engine = sh.shard_stats()[1]["engine"]
+    move = bd.streams.rebalance("shift.stream")
+    # the currently hot engine donates (lifetime counters would have
+    # weighed all four shards near-equal and could pick either side)
+    assert move["from"] == hot_engine
 
 
 # -- background tick driver ---------------------------------------------------

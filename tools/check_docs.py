@@ -61,6 +61,21 @@ def build_fixture():
                                shards=2, block_rows=8)
     waves.append({"signal": np.sin(2 * np.pi * seq / 360.0),
                   "hr": 75.0 + seq % 7})
+    # event-time pair: 48 rows each on a shared ts axis (ECG offset by
+    # 0.25), delivered OUT OF ORDER (adjacent pairs swapped — bounded
+    # displacement 1 < max_delay) so watermarks/insertion buffers do
+    # real work in the documented examples; both sharded 2x over the
+    # same engines, so the documented join takes the partial path
+    ts = np.arange(48, dtype=np.float64)
+    swap = ts.astype(np.int64) ^ 1                 # 1,0,3,2,5,4,...
+    for name, field, offset in (("icu.abp", "abp", 0.0),
+                                ("icu.ecg", "ecg", 0.25)):
+        s = bd.register_stream("streamstore0", name, ("ts", field),
+                               capacity=512, shards=2, block_rows=8,
+                               ts_field="ts", max_delay=4.0)
+        value = (90.0 + np.sin(ts) if field == "abp"
+                 else np.cos(ts))
+        s.append({"ts": (ts + offset)[swap], field: value[swap]})
     return bd
 
 
