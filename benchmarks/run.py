@@ -13,6 +13,13 @@ against a committed baseline report and exits non-zero when any common
 row's median exceeds ``baseline * (1 + tolerance)`` — so speedups and
 regressions stop being invisible in CI.  ``--write-baseline PATH``
 refreshes the committed baseline from the current run.
+
+Row kinds: most rows are wall-clock (``us_per_call``, smaller is
+better).  A suite may mark a row ``kind="ratio"`` (4th tuple element):
+its value is a self-normalizing bigger-is-better ratio (e.g. concurrent
+vs serial ingest throughput measured in the same pass), so the gate
+compares ratios directly and stays machine-independent — runner drift
+cannot fire it and cannot hide behind a baseline refresh either.
 """
 from __future__ import annotations
 
@@ -70,6 +77,18 @@ def report_medians(report: Dict[str, Any]) -> Dict[Tuple[str, str], float]:
             for k, v in _row_pools(report).items()}
 
 
+def report_kinds(report: Dict[str, Any]) -> Dict[Tuple[str, str], str]:
+    """(suite, row name) -> row kind for rows that declare one ("ratio"
+    or "time"); rows without a kind field are omitted, so a report from
+    before the field existed cannot demote a known ratio row."""
+    kinds: Dict[Tuple[str, str], str] = {}
+    for suite, rows in report.get("suites", {}).items():
+        for row in rows:
+            if "kind" in row:
+                kinds[(suite, row["name"])] = row["kind"]
+    return kinds
+
+
 def compare_reports(baseline: Dict[str, Any], current: Dict[str, Any],
                     tolerance: float = 0.25) -> Dict[str, Any]:
     """Diff two ``--json`` reports by per-row median us_per_call.
@@ -82,20 +101,34 @@ def compare_reports(baseline: Dict[str, Any], current: Dict[str, Any],
     cannot hide a real slowdown.  Rows faster by the same margin are
     reported as improvements.  Only rows present in both reports are
     compared — renamed or new rows can't fail the gate, but they are
-    listed so a silently vanished benchmark is visible."""
+    listed so a silently vanished benchmark is visible.
+
+    ``kind="ratio"`` rows invert the direction: their value is a
+    bigger-is-better self-normalized ratio, so a row regresses when its
+    current median falls below ``baseline * (1 - tolerance)`` AND its
+    best (maximum) sample does too."""
     base = report_medians(baseline)
     cur = report_medians(current)
     cur_pools = _row_pools(current)
+    # the current report's kind wins (a row may change kind in the PR
+    # that converts it); baseline-only kinds cover the transition run
+    kinds = {**report_kinds(baseline), **report_kinds(current)}
     rows, regressions, improvements = [], [], []
     for key in sorted(base.keys() & cur.keys()):
         b, c = base[key], cur[key]
         ratio = c / b if b > 0 else float("inf")
-        cutoff = b * (1.0 + tolerance)
-        regressed = c > cutoff and min(cur_pools[key]) > cutoff
-        improved = c < b * (1.0 - tolerance)
+        kind = kinds.get(key, "time")
+        if kind == "ratio":
+            cutoff = b * (1.0 - tolerance)
+            regressed = c < cutoff and max(cur_pools[key]) < cutoff
+            improved = c > b * (1.0 + tolerance)
+        else:
+            cutoff = b * (1.0 + tolerance)
+            regressed = c > cutoff and min(cur_pools[key]) > cutoff
+            improved = c < b * (1.0 - tolerance)
         name = f"{key[0]}/{key[1]}" if not key[1].startswith(key[0]) \
             else key[1]
-        rows.append({"suite": key[0], "name": key[1],
+        rows.append({"suite": key[0], "name": key[1], "kind": kind,
                      "baseline_us": round(b, 3), "current_us": round(c, 3),
                      "ratio": round(ratio, 4), "regressed": regressed})
         if regressed:
@@ -147,12 +180,14 @@ def main() -> None:
                     # trajectories stay comparable across shard configs
                     from benchmarks import stream_bench
                     report["meta"]["stream"] = dict(stream_bench.LAST_META)
-                report["suites"].setdefault(name, []).extend(
-                    {"name": row_name, "us_per_call": us,
-                     "derived": derived}
-                    for row_name, us, derived in rows)
-                for row_name, us, derived in rows:
-                    print(f"{row_name},{us:.1f},{derived}")
+                for row in rows:
+                    row_name, us, derived = row[0], row[1], row[2]
+                    kind = row[3] if len(row) > 3 else "time"
+                    report["suites"].setdefault(name, []).append(
+                        {"name": row_name, "us_per_call": us,
+                         "derived": derived, "kind": kind})
+                    value = f"{us:.3f}" if kind == "ratio" else f"{us:.1f}"
+                    print(f"{row_name},{value},{derived}")
             except Exception:                             # noqa: BLE001
                 report["failures"].append(
                     {"suite": name, "traceback": traceback.format_exc()})

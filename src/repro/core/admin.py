@@ -58,6 +58,11 @@ def status(bd: BigDawg) -> Dict[str, Any]:
     # (the Monitor's copy, fed every tick — matches each stream's stats)
     out["streams"]["watermarks"] = {
         k: dict(v) for k, v in bd.monitor.stream_watermarks.items()}
+    # multi-producer ingest health: per-stream producer counts, seq
+    # blocks reserved, in-flight rows and ordered-commit contention
+    # (the Monitor's per-tick copy of stream.ingest_concurrency())
+    out["streams"]["ingest_concurrency"] = {
+        k: dict(v) for k, v in bd.monitor.ingest_stats.items()}
     out["plan_cache"] = dict(bd.planner.plan_cache.stats(),
                              capacity=cfg.cache_size,
                              max_age_seconds=cfg.cache_max_age_seconds)

@@ -106,7 +106,8 @@ class BigDawg:
                         num_engines: Optional[int] = None,
                         rolling: bool = True, block_rows: int = 64,
                         ts_field: Optional[str] = None,
-                        max_delay: float = 0.0):
+                        max_delay: float = 0.0,
+                        idle_timeout: Optional[float] = None):
         """Create a ring-buffer stream and register it in the catalog (so
         the Planner can place streaming nodes).
 
@@ -126,6 +127,19 @@ class BigDawg:
         watermark passes them; later arrivals are dropped as late) and
         answers ``ewindow``/``join`` BQL ops.  Without it, semantics are
         exactly the append-ordered streams of before.
+
+        ``idle_timeout`` (seconds, event-time streams) is automatic
+        punctuation: a key-hashed shard whose key range goes quiet for
+        that long stops holding the min-watermark back, and a stream
+        with no arrivals at all flushes out entirely —
+        ``StreamRuntime.tick`` drives the advance, so standing queries
+        over one quiet key range unstick without a manual ``flush()``.
+
+        Concurrent producers are first-class: ``stream.producer()``
+        hands out per-producer append handles, appends reserve seq
+        blocks instead of serializing on a coordinator lock, and
+        ``stream.ingest_concurrency()`` (also in
+        ``admin.status()["streams"]``) reports the contention counters.
         """
         from repro.stream.engine import (SEQ_FIELD, ShardedStream, Stream,
                                          StreamEngine)
@@ -133,7 +147,8 @@ class BigDawg:
             engine_name
         if shards <= 1:
             stream = Stream(name, fields, capacity, rolling=rolling,
-                            ts_field=ts_field, max_delay=max_delay)
+                            ts_field=ts_field, max_delay=max_delay,
+                            idle_timeout=idle_timeout)
             self.register_object(engine_name, name, stream,
                                  fields=tuple(fields))
             return stream
@@ -154,7 +169,8 @@ class BigDawg:
             pairs.append((ename, shard))
         handle = ShardedStream(name, fields, pairs, shard_key=shard_key,
                                block_rows=block_rows, ts_field=ts_field,
-                               max_delay=max_delay)
+                               max_delay=max_delay,
+                               idle_timeout=idle_timeout)
         # the handle lives on every participating engine AND the caller's
         # anchor engine (shards always spread over streamstore0..spread-1,
         # but engine_name must still resolve the logical stream)

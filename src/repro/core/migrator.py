@@ -139,13 +139,16 @@ class Migrator:
         """Move a live ring buffer between StreamEngines (see module
         docstring: this route moves, the others copy).
 
-        Callers must serialize producers around a direct move: a row
-        appended to the source between ``export_state`` and the delete
-        below lands in the doomed object and is lost.  Shard moves are
-        safe — ``ShardedStream.migrate_shard`` holds the coordinator
-        lock, which every scatter append also takes — but moving an
-        unsharded stream under a live producer needs the same external
-        serialization (pause the feed, or move between ticks)."""
+        Shard moves are safe under concurrent producers:
+        ``ShardedStream.migrate_shard`` pauses the shard's ordered
+        committer, so every seq block reserved before the move drains
+        into the exported state and blocks reserved during it publish
+        to the new ring afterwards — in-flight reservations are carried,
+        never lost.  ``Stream.export_state`` likewise drains its own
+        committer first.  Only a *direct* move of an unsharded stream
+        still needs external serialization: a block reserved after the
+        export but before the delete below lands in the doomed source
+        object (pause the feed, or move between ticks)."""
         from repro.stream.engine import Stream, StreamEngine
         obj = engine_from.get(object_from)
         if not isinstance(obj, Stream):

@@ -63,6 +63,11 @@ class Monitor:
         # per-stream event-time health: low watermark + late/pending
         # counters (StreamRuntime.tick feeds this for ts streams)
         self.stream_watermarks: Dict[str, Dict[str, Any]] = {}
+        # per-stream multi-producer ingest health: open/peak producer
+        # handles, seq blocks reserved, rows in flight, ordered-commit
+        # waits (StreamRuntime.tick feeds this from
+        # stream.ingest_concurrency(); admin.status()["streams"] shows it)
+        self.ingest_stats: Dict[str, Dict[str, int]] = {}
 
     # -- benchmark API (paper naming) ----------------------------------------
     def add_benchmarks(self, signature: Signature, lean: bool,
@@ -209,6 +214,14 @@ class Monitor:
                 "watermark": (None if watermark == float("-inf")
                               else float(watermark)),
                 "late": int(late), "pending": int(pending)}
+
+    def observe_ingest(self, stream_name: str,
+                       stats: Dict[str, int]) -> None:
+        """Record a stream's multi-producer ingest counters (the
+        ``ingest_concurrency()`` block: producers open/peak, blocks and
+        rows reserved, in-flight rows, ordered-commit waits)."""
+        with self._lock:
+            self.ingest_stats[stream_name] = dict(stats)
 
     @staticmethod
     def shard_load(stats: Dict[str, float]) -> float:

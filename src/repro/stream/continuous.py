@@ -237,6 +237,15 @@ class StreamRuntime:
         # one engine->streams snapshot serves every query this tick (the
         # per-query drop/late/watermark lookups below all read it)
         streams_map = self._streams_map()
+        # idle-timeout punctuation runs BEFORE the standing queries, so
+        # a watermark advance it produces unsticks watermark-gated
+        # queries on this very tick (not the next one)
+        for name, stream in streams_map.items():
+            if "@shard" in name:
+                continue
+            if (getattr(stream, "idle_timeout", None) is not None
+                    and getattr(stream, "ts_field", None) is not None):
+                stream.advance_idle_watermark()
         for cq in due:
             if cq.event_time:
                 # watermark gating: an ewindow/join answer can only
@@ -304,8 +313,13 @@ class StreamRuntime:
         # per-stream low watermarks land there too (event-time health:
         # admin.status()["streams"] and the Monitor agree by construction)
         for name, stream in streams_map.items():
-            if "@shard" in name or getattr(stream, "ts_field",
-                                           None) is None:
+            if "@shard" in name:
+                continue
+            # multi-producer ingest counters for every logical stream
+            ic = getattr(stream, "ingest_concurrency", None)
+            if ic is not None:
+                self.monitor.observe_ingest(name, ic())
+            if getattr(stream, "ts_field", None) is None:
                 continue
             self.monitor.observe_watermark(
                 name, stream.watermark, late=stream.total_late,

@@ -26,6 +26,24 @@ shard-transparent.  Shard ring buffers are *live-migratable* between
 StreamEngines (the Migrator's ``stream`` route moves data + seq watermark
 + drop counters) without interrupting standing queries.
 
+Multi-producer ingest (arXiv:1905.10336's observation that polystore
+throughput dies at serialized ingest boundaries): appends no longer
+serialize on one coordinator lock.  A producer atomically *reserves* a
+contiguous block of global sequence numbers under a micro-lock (counter
+bumps only — no ring work ever runs inside it), stages its rows into
+per-shard payloads on its own thread, and publishes each payload through
+that shard's **ordered committer**, which admits blocks strictly in
+reservation order — so every shard ring stays seq-sorted and gathers,
+rolling sums, watermark flushes and drop accounting are bit-identical to
+the old serial path.  Reads see the *committed frontier*: a seq is
+visible only once every block below it has fully published, so a gather
+can never observe a half-written batch.  ``Stream.producer()`` hands out
+per-producer handles and ``ingest_concurrency()`` reports the
+reservation/contention counters (surfaced via Monitor/admin.status()).
+Event-time streams keep their insertion buffer serialized — there the
+global seq is *reserved at flush time* (ts order), and concurrent
+producers contend only for the cheap buffer parking.
+
 Event time (arXiv:1609.07548 makes S-Store the polystore's time-ordered
 engine): a stream declared with ``ts_field`` accepts bounded out-of-order
 ingest.  Arriving rows park in an insertion buffer until the stream's
@@ -42,6 +60,7 @@ closed only once the watermark passes its end.  Streams without
 from __future__ import annotations
 
 import collections
+import contextlib
 import math
 import threading
 import time
@@ -163,6 +182,7 @@ def _event_time_stats(stream) -> Dict[str, Any]:
     wm = stream.watermark
     return {"ts_field": stream.ts_field,
             "max_delay": stream.max_delay,
+            "idle_timeout": stream.idle_timeout,
             "watermark": None if wm == float("-inf") else wm,
             "late": stream.total_late,
             "pending": stream._pending_rows}
@@ -189,13 +209,187 @@ class StreamException(DataUnavailableException):
     so cached plans survive it."""
 
 
-class Stream:
+class _OrderedCommitter:
+    """FIFO block publisher for one commit lane (a plain ring, or one
+    shard of a ShardedStream).
+
+    Tickets are issued in seq-reservation order — the caller issues
+    while holding its reservation micro-lock, so ticket order == global
+    seq order on this lane.  ``commit(ticket, fn)`` blocks until every
+    earlier ticket has published, runs ``fn`` (the ring write), then
+    releases the next block: the lane's ring receives blocks strictly
+    in seq order even when producers finish staging out of order.
+
+    Because tickets are issued under ONE micro-lock, the wait-for graph
+    across lanes always follows global reservation order (an earlier
+    producer never waits on a later one), so committing multiple lanes
+    in any per-producer order cannot deadlock.
+
+    ``pause()`` is the live-migration barrier: it drains every already-
+    issued ticket (in-flight blocks publish to the old ring) and holds
+    later tickets back until ``resume()`` — those blocks carry over to
+    whatever object the commit closure resolves after the swap."""
+
+    def __init__(self) -> None:
+        self._cond = threading.Condition(threading.Lock())
+        self._next_ticket = 0
+        self._committed = 0
+        self._pause_at: Optional[int] = None
+        self.waits = 0             # commits that had to block (contention)
+
+    def issue(self) -> int:
+        with self._cond:
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            return ticket
+
+    def _turn(self, ticket: int) -> bool:
+        return (self._committed == ticket
+                and (self._pause_at is None or ticket < self._pause_at))
+
+    def commit(self, ticket: int, fn):
+        """Publish ticket's block: wait for its turn, run ``fn``, release
+        the next.  ``fn``'s return value is passed through; the lane
+        advances even when ``fn`` raises (a poisoned block must not wedge
+        every later producer forever).
+
+        ``fn`` runs OUTSIDE the condition lock: once it is ticket's turn
+        no other commit can run on this lane until ``_committed``
+        advances (in the finally), so mutual exclusion holds — and
+        ``issue()`` (called under the owner's reservation micro-lock)
+        never blocks behind an in-progress ring write, keeping the
+        reservation path counter-bumps-only for real."""
+        with self._cond:
+            if not self._turn(ticket):
+                self.waits += 1
+                self._cond.wait_for(lambda: self._turn(ticket))
+        try:
+            return fn()
+        finally:
+            with self._cond:
+                self._committed += 1
+                self._cond.notify_all()
+
+    def quiesce(self) -> None:
+        """Drain: wait until every ticket issued so far has committed
+        (no pause — new tickets keep flowing afterwards)."""
+        with self._cond:
+            barrier = self._next_ticket
+            self._cond.wait_for(lambda: self._committed >= barrier)
+
+    def pause(self) -> None:
+        """Drain issued tickets and hold later ones until resume()."""
+        with self._cond:
+            assert self._pause_at is None, "committer already paused"
+            self._pause_at = self._next_ticket
+            self._cond.wait_for(
+                lambda: self._committed >= self._pause_at)
+
+    def resume(self) -> None:
+        with self._cond:
+            self._pause_at = None
+            self._cond.notify_all()
+
+    @property
+    def in_flight(self) -> int:
+        with self._cond:
+            return self._next_ticket - self._committed
+
+
+class StreamProducer:
+    """One producer's handle onto a stream (``stream.producer()``).
+
+    ``append`` delegates to the stream's reservation path — the handle
+    adds no locking of its own — while tracking per-producer counts;
+    the stream tracks how many handles are open at once
+    (``ingest_concurrency()["producers_open"/"producers_peak"]``).
+    Context manager; ``close()`` is idempotent."""
+
+    def __init__(self, stream, name: Optional[str] = None) -> None:
+        self.stream = stream
+        serial = stream._producer_opened()
+        self.name = name or f"{stream.name}#p{serial}"
+        self.batches = 0
+        self.rows = 0
+        self.dropped = 0
+        self._closed = False
+
+    def append(self, rows: Dict[str, Iterable[float]]) -> Dict[str, int]:
+        counts = self.stream.append(rows)
+        self.batches += 1
+        self.rows += counts["appended"]
+        self.dropped += counts.get("dropped", 0)
+        return counts
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self.stream._producer_closed()
+
+    def __enter__(self) -> "StreamProducer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class _MultiProducerIngest:
+    """Shared producer-registry + reservation-stats surface of Stream
+    and ShardedStream (the ``ingest_concurrency`` block both report)."""
+
+    def _init_ingest(self) -> None:
+        self._reserve_lock = threading.Lock()   # seq/ticket micro-lock
+        self.blocks_reserved = 0   # reserve calls (flushes, for ts streams)
+        self.rows_reserved = 0     # rows covered by those reservations
+        self.producers_open = 0
+        self.producers_peak = 0
+        self._producer_serial = 0
+
+    def producer(self, name: Optional[str] = None) -> StreamProducer:
+        """A handle for one ingest thread; see StreamProducer."""
+        return StreamProducer(self, name)
+
+    def _producer_opened(self) -> int:
+        with self._reserve_lock:
+            self.producers_open += 1
+            self.producers_peak = max(self.producers_peak,
+                                      self.producers_open)
+            self._producer_serial += 1
+            return self._producer_serial
+
+    def _producer_closed(self) -> None:
+        with self._reserve_lock:
+            self.producers_open -= 1
+
+    def _commit_waits(self) -> int:             # per-class override
+        raise NotImplementedError
+
+    def _in_flight_rows(self) -> int:           # per-class override
+        raise NotImplementedError
+
+    def ingest_concurrency(self) -> Dict[str, int]:
+        """Reservation/contention counters of the multi-producer ingest
+        path: how many producer handles are (were) open, how many seq
+        blocks/rows have been reserved, how many are reserved but not
+        yet published (``in_flight_rows``), and how many commits had to
+        wait for an earlier block (``commit_waits`` — the contention
+        signal; 0 under a single producer)."""
+        return {"producers_open": self.producers_open,
+                "producers_peak": self.producers_peak,
+                "blocks_reserved": self.blocks_reserved,
+                "rows_reserved": self.rows_reserved,
+                "in_flight_rows": self._in_flight_rows(),
+                "commit_waits": self._commit_waits()}
+
+
+class Stream(_MultiProducerIngest):
     """Append-only bounded ring buffer of rows (fixed float64 fields)."""
 
     def __init__(self, name: str, fields: Sequence[str],
                  capacity: int = 4096, rolling: bool = True,
                  ts_field: Optional[str] = None,
-                 max_delay: float = 0.0) -> None:
+                 max_delay: float = 0.0,
+                 idle_timeout: Optional[float] = None) -> None:
         assert fields, "a stream needs at least one field"
         assert capacity > 0, "capacity must be positive"
         self.name = name
@@ -245,6 +439,19 @@ class Stream:
         self.agg_cache_hits = 0
         self.agg_computes = 0
         self._lock = threading.Lock()
+        # -- multi-producer ingest: seq blocks reserve on the micro-lock,
+        # ring writes publish through the ordered committer (FIFO by
+        # reservation, so results are bit-identical to the serial path).
+        # Event-time streams reserve at flush instead (ts order).
+        self._init_ingest()
+        self._committer = _OrderedCommitter()
+        # -- idle-timeout punctuation: after ``idle_timeout`` seconds
+        # with no arrivals, advance_idle_watermark() flushes the whole
+        # insertion buffer (the automatic analog of flush())
+        assert idle_timeout is None or idle_timeout > 0
+        self.idle_timeout = idle_timeout
+        self._last_arrival: Optional[float] = None
+        self._now = time.monotonic        # injectable for tests
 
     # -- ingest ---------------------------------------------------------------
     def append(self, rows: Dict[str, Iterable[float]]) -> Dict[str, int]:
@@ -253,6 +460,12 @@ class Stream:
         Rows beyond ``capacity`` overwrite the oldest buffered rows; the
         overwritten count is the batch's ``dropped`` (backpressure is
         drop-oldest, never blocking the producer).
+
+        Concurrent producers are safe: each batch reserves the next seq
+        block under the reservation micro-lock (no ring work inside it)
+        and publishes through the ordered committer, so batches land in
+        the ring whole and in reservation order — a single producer sees
+        exactly the old serial semantics, result dict included.
         """
         if set(rows) != set(self.fields):
             raise StreamException(
@@ -272,11 +485,30 @@ class Stream:
                 return counts
         if self.ts_field is not None:
             return self._append_event_time(cols, n)
-        with self._lock:
-            dropped = self._ingest_locked(cols, n)
-            self._append_times.append((time.monotonic(), n))
-            return {"appended": n, "dropped": dropped,
-                    "rows": self._count}
+        return self._append_prepared(cols, n)
+
+    def _append_prepared(self, cols: Dict[str, np.ndarray],
+                         n: int) -> Dict[str, int]:
+        """Reserve-and-publish for payloads already validated and
+        converted to float64 columns — the shared tail of the public
+        ``append`` and the per-shard entry point of the ShardedStream
+        scatter (one validation per logical batch, not one per shard):
+        reserve the seq block under the micro-lock, then publish the
+        ring write through the ordered committer."""
+        with self._reserve_lock:
+            ticket = self._committer.issue()
+            self.blocks_reserved += 1
+            self.rows_reserved += n
+
+        def write() -> Dict[str, int]:
+            with self._lock:
+                dropped = self._ingest_locked(cols, n)
+                self._append_times.append((time.monotonic(), n))
+                self._last_arrival = self._now()
+                return {"appended": n, "dropped": dropped,
+                        "rows": self._count}
+
+        return self._committer.commit(ticket, write)
 
     def _ingest_locked(self, cols: Dict[str, np.ndarray], n: int) -> int:
         """Write ``n`` rows into the ring (caller holds the lock).  The
@@ -337,6 +569,7 @@ class Stream:
         into the ring in timestamp order.  Rows below the watermark are
         late — counted and dropped, never inserted out of order."""
         with self._lock:
+            self._last_arrival = self._now()
             cols, kept, nlate = _classify_late(self, cols, n)
             if kept:
                 self._pending.append(cols)
@@ -375,6 +608,11 @@ class Stream:
         else:
             self._pending = []
         self._pending_rows -= m
+        # event-time streams reserve the global seq block HERE, at flush
+        # (ts order == seq order); counted so ingest_concurrency stats
+        # stay meaningful for both stream kinds
+        self.blocks_reserved += 1
+        self.rows_reserved += m
         dropped = self._ingest_locked(flush_cols, m)
         return m, dropped
 
@@ -392,6 +630,35 @@ class Stream:
             return {"flushed": flushed, "dropped": dropped,
                     "watermark": self.watermark,
                     "pending": self._pending_rows}
+
+    def advance_idle_watermark(self) -> Dict[str, Any]:
+        """Automatic punctuation: when the stream has seen no arrivals
+        for ``idle_timeout`` seconds, advance the watermark to the max
+        timestamp seen (== ``flush()``), so a quiet feed's buffered rows
+        and open windows don't stall forever.  A no-op while traffic
+        flows, when no ``idle_timeout`` was configured, or on streams
+        without an event-time axis.  ``StreamRuntime.tick`` calls this
+        for every registered event-time stream."""
+        if self.ts_field is None or self.idle_timeout is None:
+            return {"flushed": 0, "dropped": 0}
+        with self._lock:
+            if (self._last_arrival is None
+                    or self._now() - self._last_arrival
+                    < self.idle_timeout):
+                return {"flushed": 0, "dropped": 0}
+            flushed, dropped = self._flush_locked(self.max_ts_seen)
+            return {"flushed": flushed, "dropped": dropped}
+
+    # -- ingest_concurrency hooks (see _MultiProducerIngest) -------------------
+    def _commit_waits(self) -> int:
+        return self._committer.waits
+
+    def _in_flight_rows(self) -> int:
+        # reserved-but-unpublished rows; event-time streams reserve at
+        # flush, so for them this is always 0 (pending rows are reported
+        # separately, in the event-time stats block)
+        return self.rows_reserved - self.total_appended \
+            if self.ts_field is None else 0
 
     def _reanchor_cums_locked(self) -> None:
         """Rewrite every cumulative slot as a prefix sum over the
@@ -594,7 +861,17 @@ class Stream:
         """Deep-copy the full live state — ring data, cumulative rings,
         write position, seq watermark, drop counters, rate history — so a
         Migrator can rebuild this stream byte-for-byte on another
-        StreamEngine without losing standing-query continuity."""
+        StreamEngine without losing standing-query continuity.
+
+        Drains the ordered committer first: every seq block reserved
+        before this call publishes into the exported state (in-flight
+        reservations are carried, not lost).  Blocks reserved *after*
+        the drain still land in this object — for a direct unsharded
+        move the caller must pause its producers (documented on the
+        Migrator's stream route); shard moves are safe because
+        ``ShardedStream.migrate_shard`` holds the shard's committer
+        paused across the whole move."""
+        self._committer.quiesce()
         with self._lock:
             return {
                 "name": self.name, "fields": self.fields,
@@ -618,6 +895,9 @@ class Stream:
                             for b in self._pending],
                 "evict_field": self._evict_field,
                 "evicted_ts": self._evicted_ts,
+                "idle_timeout": self.idle_timeout,
+                "blocks_reserved": self.blocks_reserved,
+                "rows_reserved": self.rows_reserved,
             }
 
     @classmethod
@@ -625,7 +905,8 @@ class Stream:
         stream = cls(state["name"], state["fields"], state["capacity"],
                      rolling=state.get("rolling", True),
                      ts_field=state.get("ts_field"),
-                     max_delay=state.get("max_delay", 0.0))
+                     max_delay=state.get("max_delay", 0.0),
+                     idle_timeout=state.get("idle_timeout"))
         stream._cols = {f: np.asarray(v, np.float64)
                         for f, v in state["cols"].items()}
         stream._cum = {f: np.asarray(v, np.float64)
@@ -650,6 +931,9 @@ class Stream:
         stream._evict_field = state.get("evict_field", stream.ts_field)
         stream._evicted_ts = float(state.get("evicted_ts",
                                              float("-inf")))
+        stream.blocks_reserved = int(state.get("blocks_reserved", 0))
+        stream.rows_reserved = int(state.get(
+            "rows_reserved", stream.total_appended))
         return stream
 
     # -- island data-model plumbing ------------------------------------------
@@ -666,13 +950,14 @@ class Stream:
             out: Dict[str, Any] = {
                 "rows": self._count, "capacity": self.capacity,
                 "appended": self.total_appended,
-                "dropped": self.total_dropped}
+                "dropped": self.total_dropped,
+                "ingest_concurrency": self.ingest_concurrency()}
             if self.ts_field is not None:
                 out.update(_event_time_stats(self))
             return out
 
 
-class ShardedStream:
+class ShardedStream(_MultiProducerIngest):
     """One logical stream hash-partitioned across multiple StreamEngines.
 
     Each shard is an ordinary ``Stream`` named ``{name}@shard{i}`` living
@@ -692,12 +977,19 @@ class ShardedStream:
     skewed key traffic can evict a hot shard's rows earlier than one big
     ring would have (seq gaps in snapshots, tumbling windows raise).
 
-    Concurrency: appends and gathers serialize on the coordinator lock
-    (global seq order is the stream's only notion of time, and it keeps
-    every shard ring seq-sorted); inside an append the per-shard ring
-    writes fan out to a thread pool, so large-batch ingest scales with
-    engine count (numpy copies release the GIL).  Shard locks nest
-    strictly inside the coordinator lock.
+    Concurrency: producers no longer serialize on the coordinator lock.
+    An append reserves its contiguous global seq block under the
+    reservation micro-lock (counter + per-shard commit tickets, no ring
+    work), stages per-shard payloads on its own thread, and publishes
+    each through that shard's ordered committer — blocks enter every
+    shard ring strictly in seq order, so rings stay seq-sorted and
+    gathers are bit-identical to the serial path.  ``total_appended`` is
+    the *committed frontier*: it advances only once every earlier block
+    has fully published, and every read (snapshot/window/aggregate)
+    sees at most the frontier — never a half-written batch.  Gathers,
+    event-time ingest, migration, and stats still take the coordinator
+    lock; a single large batch additionally fans its per-shard ring
+    writes out to a thread pool (numpy copies release the GIL).
     """
 
     # fan the per-shard writes out to threads only when the batch is big
@@ -709,7 +1001,8 @@ class ShardedStream:
                  shard_key: Optional[str] = None,
                  block_rows: int = 64,
                  ts_field: Optional[str] = None,
-                 max_delay: float = 0.0) -> None:
+                 max_delay: float = 0.0,
+                 idle_timeout: Optional[float] = None) -> None:
         assert shards, "a sharded stream needs at least one shard"
         self.name = name
         self.fields: Tuple[str, ...] = tuple(fields)
@@ -720,7 +1013,25 @@ class ShardedStream:
             assert shard_key in self.fields, shard_key
         self._engines: List[str] = [e for e, _ in shards]
         self._shards: List[Stream] = [s for _, s in shards]
-        self.total_appended = 0           # global sequence high-water mark
+        # committed frontier: every seq below it has fully published to
+        # its shard ring (multi-producer appends advance it only once
+        # all earlier blocks finished, so reads never see half a batch)
+        self.total_appended = 0
+        # -- multi-producer ingest: seq reservation counter + per-shard
+        # ordered committers + the block-completion ledger behind the
+        # frontier.  ``reserved`` is the next global seq to hand out.
+        self._init_ingest()
+        self.reserved = 0
+        self._committers = [_OrderedCommitter() for _ in self._shards]
+        self._frontier = threading.Condition(threading.Lock())
+        self._finished: Dict[int, int] = {}      # block start -> rows
+        # the scatter fan-out pool serves ONE producer at a time (pool
+        # tasks block on commit order; sharing it across producers could
+        # queue an earlier producer's ring write behind a later
+        # producer's waiting task — a deadlock); contenders that find
+        # the gate held just commit inline, in shard order
+        self._pool_gate = threading.Lock()
+        self._rate_lock = threading.Lock()       # guards _append_times
         # -- event time: the coordinator owns the insertion buffer — the
         # global seq is assigned at flush time in ts order, so shard rings
         # receive monotone ts bands and stay sorted on both seq and ts
@@ -741,6 +1052,15 @@ class ShardedStream:
         # low watermark is the MINIMUM across shards that have data, so
         # one lagging shard holds every window open)
         self._shard_max_ts = [float("-inf")] * len(self._shards)
+        # idle-timeout: a key range that goes quiet for this many
+        # seconds stops holding the min-watermark back (and a fully
+        # idle stream flushes outright) — the automatic flush()
+        assert idle_timeout is None or idle_timeout > 0
+        self.idle_timeout = idle_timeout
+        self._last_arrival: Optional[float] = None
+        self._shard_last_arrival: List[Optional[float]] = \
+            [None] * len(self._shards)
+        self._now = time.monotonic        # injectable for tests
         if ts_field is not None:
             for shard in self._shards:
                 shard._evict_field = ts_field
@@ -788,9 +1108,14 @@ class ShardedStream:
 
     # -- ingest: scatter ------------------------------------------------------
     def append(self, rows: Dict[str, Iterable[float]]) -> Dict[str, int]:
-        """Scatter-append a batch: global seqs assigned under the
-        coordinator lock, rows partitioned to their shards, per-shard ring
-        writes fanned out in parallel for large batches."""
+        """Scatter-append a batch.  The producer reserves the global seq
+        block [t, t+n) under the reservation micro-lock (counter bumps
+        and per-shard commit tickets, never ring work), partitions its
+        rows into per-shard payloads on its own thread, and publishes
+        each payload through that shard's ordered committer — so
+        concurrent producers overlap all staging work and serialize only
+        the per-shard ring writes, in seq order, keeping every shard
+        ring seq-sorted and gathers bit-identical to serial ingest."""
         if set(rows) != set(self.fields):
             raise StreamException(
                 f"stream {self.name!r} fields {self.fields} != "
@@ -802,69 +1127,183 @@ class ShardedStream:
             raise StreamException("ragged append batch")
         if self.ts_field is not None:
             return self._append_event_time(cols, n)
+        if n == 0:
+            with self._rate_lock:
+                self._append_times.append((time.monotonic(), 0))
+            return {"appended": 0, "dropped": 0,
+                    "rows": sum(s.num_rows for s in self._shards)}
         nsh = len(self._shards)
-        with self._lock:
-            t = self.total_appended
-            seqs = np.arange(t, t + n, dtype=np.float64)
-            if self.shard_key is None and n // self.block_rows <= 32:
-                # round-robin over seq blocks: shard of seq q is
-                # (q // block_rows) % N.  A batch spanning few blocks
-                # splits into contiguous zero-copy views at block
-                # boundaries (the big-batch ingest fast path)
-                blk = self.block_rows
-                segs: List[List[Tuple[int, int]]] = [[] for _ in
-                                                     range(nsh)]
-                off = 0
-                while off < n:
-                    q = t + off
-                    take = min(n - off, blk - q % blk)
-                    segs[(q // blk) % nsh].append((off, off + take))
-                    off += take
-                parts = []
-                for i in range(nsh):
-                    if len(segs[i]) == 1:
-                        a, b = segs[i][0]
-                        payload = {f: v[a:b] for f, v in cols.items()}
-                        payload[SEQ_FIELD] = seqs[a:b]
-                    else:
-                        payload = {f: np.concatenate(
-                            [v[a:b] for a, b in segs[i]])
-                            for f, v in cols.items()} if segs[i] else \
-                            {f: v[:0] for f, v in cols.items()}
-                        payload[SEQ_FIELD] = np.concatenate(
-                            [seqs[a:b] for a, b in segs[i]]) \
-                            if segs[i] else seqs[:0]
-                    parts.append(payload)
+        owner = present = None
+        if self.shard_key is not None:
+            # key-hash owners depend only on the data — computed before
+            # reservation so the micro-lock never touches the batch
+            owner = _key_owners(cols[self.shard_key], nsh)
+            present = np.bincount(owner, minlength=nsh) > 0
+        # -- reserve: seq block + per-shard tickets (micro-lock, O(nsh))
+        with self._reserve_lock:
+            t = self.reserved
+            self.reserved += n
+            if owner is None:
+                touched = self._touched_shards(t, n)
             else:
-                if self.shard_key is None:
-                    # many small blocks: a Python per-segment loop would
-                    # dominate — compute owners vectorized instead
-                    owner = ((t + np.arange(n)) // self.block_rows) % nsh
+                touched = [i for i in range(nsh) if present[i]]
+            tickets = {i: self._committers[i].issue() for i in touched}
+            self.blocks_reserved += 1
+            self.rows_reserved += n
+        # -- stage: partition into per-shard payloads (no locks held)
+        try:
+            parts = self._partition(cols, n, t, owner)
+        except BaseException:
+            # never wedge the lanes: release every issued ticket as an
+            # empty publish and complete the block — its seqs become a
+            # permanent hole (windows over them raise "evicted"), but
+            # every other producer keeps flowing
+            for i in sorted(touched):
+                self._committers[i].commit(tickets[i], lambda: None)
+            self._complete_block(t, n)
+            raise
+        # -- publish: per-shard ordered commits (failures release the
+        # lane, see _commit_parts)
+        results, failure = self._commit_parts(touched, tickets, parts, n)
+        # -- complete: advance the committed frontier over every block
+        # whose predecessors have all published (reads only ever see
+        # seqs below the frontier, so no gather can observe this batch
+        # while an earlier one is still in flight)
+        self._complete_block(t, n)
+        with self._rate_lock:
+            self._append_times.append((time.monotonic(), n))
+        if failure is not None:
+            raise failure
+        dropped = sum(r["dropped"] for r in results)
+        return {"appended": n, "dropped": dropped,
+                "rows": sum(s.num_rows for s in self._shards)}
+
+    def _complete_block(self, t: int, n: int) -> None:
+        """Record block [t, t+n) as fully published and advance the
+        committed frontier over every contiguous finished block."""
+        with self._frontier:
+            self._finished[t] = n
+            while self.total_appended in self._finished:
+                self.total_appended += self._finished.pop(
+                    self.total_appended)
+            self._frontier.notify_all()
+
+    def _touched_shards(self, t: int, n: int) -> List[int]:
+        """Round-robin shards receiving rows of seq block [t, t+n) —
+        pure O(num_shards) arithmetic on the block boundaries, cheap
+        enough to run inside the reservation micro-lock."""
+        nsh = len(self._shards)
+        blk = self.block_rows
+        first, last = t // blk, (t + n - 1) // blk
+        if last - first + 1 >= nsh:
+            return list(range(nsh))
+        return sorted({b % nsh for b in range(first, last + 1)})
+
+    def _partition(self, cols: Dict[str, np.ndarray], n: int, t: int,
+                   owner: Optional[np.ndarray]) -> List[Dict[str,
+                                                             np.ndarray]]:
+        """Per-shard payloads (each with the reserved seq column) for
+        rows [t, t+n).  Round-robin batches spanning few blocks split
+        into contiguous zero-copy views; many-block and key-hash batches
+        go through the vectorized owner map.  Pure function of its
+        inputs — runs on the producer's thread with no locks held."""
+        nsh = len(self._shards)
+        seqs = np.arange(t, t + n, dtype=np.float64)
+        if owner is None and n // self.block_rows <= 32:
+            # round-robin over seq blocks: shard of seq q is
+            # (q // block_rows) % N.  A batch spanning few blocks
+            # splits into contiguous zero-copy views at block
+            # boundaries (the big-batch ingest fast path)
+            blk = self.block_rows
+            segs: List[List[Tuple[int, int]]] = [[] for _ in range(nsh)]
+            off = 0
+            while off < n:
+                q = t + off
+                take = min(n - off, blk - q % blk)
+                segs[(q // blk) % nsh].append((off, off + take))
+                off += take
+            parts = []
+            for i in range(nsh):
+                if len(segs[i]) == 1:
+                    a, b = segs[i][0]
+                    payload = {f: v[a:b] for f, v in cols.items()}
+                    payload[SEQ_FIELD] = seqs[a:b]
                 else:
-                    owner = _key_owners(cols[self.shard_key], nsh)
-                parts = []
-                for i in range(nsh):
-                    idx = np.nonzero(owner == i)[0]
-                    payload = {f: v[idx] for f, v in cols.items()}
-                    payload[SEQ_FIELD] = seqs[idx]
-                    parts.append(payload)
-            self.total_appended += n
-            live = [(self._shards[i], parts[i]) for i in range(nsh)
-                    if parts[i][SEQ_FIELD].shape[0]]
-            if (len(live) > 1
-                    and n >= self.PARALLEL_APPEND_MIN_ROWS):
+                    payload = {f: np.concatenate(
+                        [v[a:b] for a, b in segs[i]])
+                        for f, v in cols.items()} if segs[i] else \
+                        {f: v[:0] for f, v in cols.items()}
+                    payload[SEQ_FIELD] = np.concatenate(
+                        [seqs[a:b] for a, b in segs[i]]) \
+                        if segs[i] else seqs[:0]
+                parts.append(payload)
+            return parts
+        if owner is None:
+            # many small blocks: a Python per-segment loop would
+            # dominate — compute owners vectorized instead
+            owner = ((t + np.arange(n)) // self.block_rows) % nsh
+        parts = []
+        for i in range(nsh):
+            idx = np.nonzero(owner == i)[0]
+            payload = {f: v[idx] for f, v in cols.items()}
+            payload[SEQ_FIELD] = seqs[idx]
+            parts.append(payload)
+        return parts
+
+    def _commit_parts(self, touched: List[int], tickets: Dict[int, int],
+                      parts: List[Dict[str, np.ndarray]], n: int
+                      ) -> Tuple[List[Dict[str, int]],
+                                 Optional[BaseException]]:
+        """Publish each staged payload through its shard's ordered
+        committer.  Every issued ticket MUST commit — even on failure —
+        or later blocks on that shard would wait forever: a publish
+        that raises is recorded (first failure returned for re-raise)
+        and its lane still advances (`_OrderedCommitter.commit` runs
+        its release in a finally).  The shard object resolves inside
+        the closure, so a block reserved before a live shard move
+        publishes to wherever the shard lives when its turn comes.
+
+        A single large batch fans its commits out to the pool when no
+        other producer holds it; contenders commit inline in shard
+        order.  Inline commits cannot deadlock: tickets follow global
+        reservation order, so an earlier producer never waits on a
+        later one — and the pool is gated to one producer because its
+        queue could otherwise park an earlier producer's ring write
+        behind a later producer's waiting task."""
+        failures: List[BaseException] = []
+
+        def publish(i: int) -> Dict[str, int]:
+            payload = parts[i]
+            try:
+                return self._committers[i].commit(
+                    tickets[i],
+                    lambda: self._shards[i]._append_prepared(
+                        payload, payload[SEQ_FIELD].shape[0]))
+            except BaseException as exc:     # noqa: BLE001 — re-raised
+                failures.append(exc)
+                return {"appended": 0, "dropped": 0}
+
+        order = sorted(touched)
+        if (len(order) > 1 and n >= self.PARALLEL_APPEND_MIN_ROWS
+                and self._pool_gate.acquire(blocking=False)):
+            try:
                 if self._pool is None:
                     self._pool = ThreadPoolExecutor(
-                        max_workers=nsh,
+                        max_workers=len(self._shards),
                         thread_name_prefix=f"scatter-{self.name}")
-                results = list(self._pool.map(
-                    lambda sp: sp[0].append(sp[1]), live))
-            else:
-                results = [s.append(p) for s, p in live]
-            dropped = sum(r["dropped"] for r in results)
-            self._append_times.append((time.monotonic(), n))
-            return {"appended": n, "dropped": dropped,
-                    "rows": sum(s.num_rows for s in self._shards)}
+                results = list(self._pool.map(publish, order))
+            finally:
+                self._pool_gate.release()
+        else:
+            results = [publish(i) for i in order]
+        return results, failures[0] if failures else None
+
+    # -- ingest_concurrency hooks (see _MultiProducerIngest) -------------------
+    def _commit_waits(self) -> int:
+        return sum(c.waits for c in self._committers)
+
+    def _in_flight_rows(self) -> int:
+        return self.reserved - self.total_appended
 
     # -- event-time ingest: coordinator insertion buffer ----------------------
     def _append_event_time(self, cols: Dict[str, np.ndarray],
@@ -879,6 +1318,7 @@ class ShardedStream:
         one lagging shard holds every window open (use ``flush()`` as
         punctuation for idle shards)."""
         with self._lock:
+            self._last_arrival = self._now()
             cols, kept, nlate = _classify_late(self, cols, n)
             ts = cols[self.ts_field]
             if kept:
@@ -898,9 +1338,12 @@ class ShardedStream:
                             self._shard_max_ts[i] = max(
                                 self._shard_max_ts[i],
                                 float(ts[sel].max()))
+                            self._shard_last_arrival[i] = \
+                                self._last_arrival
             flushed, dropped = self._flush_locked(
                 self._watermark_candidate_locked())
-            self._append_times.append((time.monotonic(), kept))
+            with self._rate_lock:
+                self._append_times.append((time.monotonic(), kept))
             return {"appended": kept, "dropped": dropped, "late": nlate,
                     "flushed": flushed, "pending": self._pending_rows,
                     "rows": sum(s.num_rows for s in self._shards)}
@@ -910,11 +1353,31 @@ class ShardedStream:
         for key-hashed streams (a shard that has never seen a row cannot
         declare other rows late and is excluded until it does), the
         global max timestamp for round-robin ones (every shard receives
-        interleaved blocks, so the per-shard minima coincide)."""
+        interleaved blocks, so the per-shard minima coincide).
+
+        With ``idle_timeout`` set, a key-hashed shard whose key range
+        has received nothing for that many seconds is also excluded —
+        one quiet shard no longer stalls the stream minimum (the
+        ROADMAP idle-timeout; ``flush()`` remains the manual escape
+        hatch).  When *every* data-bearing shard has gone idle the
+        basis falls back to the global max timestamp, flushing the
+        stream out entirely."""
         if self.shard_key is None:
             return self.max_ts_seen - self.max_delay
-        seen = [t for t in self._shard_max_ts if t > float("-inf")]
+        now = self._now() if self.idle_timeout is not None else None
+        seen, idle_excluded = [], False
+        for i, t in enumerate(self._shard_max_ts):
+            if t == float("-inf"):
+                continue
+            last = self._shard_last_arrival[i]
+            if (now is not None and last is not None
+                    and now - last >= self.idle_timeout):
+                idle_excluded = True
+                continue
+            seen.append(t)
         if not seen:
+            if idle_excluded:
+                return self.max_ts_seen - self.max_delay
             return float("-inf")
         return min(seen) - self.max_delay
 
@@ -944,7 +1407,13 @@ class ShardedStream:
         self._pending_rows -= m
         t = self.total_appended
         seqs = np.arange(t, t + m, dtype=np.float64)
+        # the seq block is reserved HERE, at flush (ts order == seq
+        # order); event-time ingest is coordinator-serialized, so the
+        # frontier and the reservation counter advance together
         self.total_appended += m
+        self.reserved = self.total_appended
+        self.blocks_reserved += 1
+        self.rows_reserved += m
         nsh = len(self._shards)
         if self.shard_key is not None:
             owner = _key_owners(flush_cols[self.shard_key], nsh)
@@ -957,7 +1426,8 @@ class ShardedStream:
                 continue
             payload = {f: v[idx] for f, v in flush_cols.items()}
             payload[SEQ_FIELD] = seqs[idx]
-            dropped += self._shards[i].append(payload)["dropped"]
+            dropped += self._shards[i]._append_prepared(
+                payload, idx.size)["dropped"]
         return m, dropped
 
     def flush(self, to_ts: Optional[float] = None) -> Dict[str, Any]:
@@ -973,6 +1443,25 @@ class ShardedStream:
             return {"flushed": flushed, "dropped": dropped,
                     "watermark": self.watermark,
                     "pending": self._pending_rows}
+
+    def advance_idle_watermark(self) -> Dict[str, Any]:
+        """Automatic punctuation for quiet key ranges: re-evaluate the
+        watermark basis with idle shards excluded (see
+        ``_watermark_candidate_locked``) and flush whatever it passes.
+        A no-op without ``idle_timeout`` or an event-time axis.
+        ``StreamRuntime.tick`` calls this every tick, so the stall
+        clears even when no other shard receives a row either."""
+        if self.ts_field is None or self.idle_timeout is None:
+            return {"flushed": 0, "dropped": 0}
+        with self._lock:
+            target = self._watermark_candidate_locked()
+            if (self._last_arrival is not None
+                    and self._now() - self._last_arrival
+                    >= self.idle_timeout):
+                # the whole stream went quiet: flush it out entirely
+                target = max(target, self.max_ts_seen)
+            flushed, dropped = self._flush_locked(target)
+            return {"flushed": flushed, "dropped": dropped}
 
     def ewindow(self, span: float,
                 slide: Optional[float] = None) -> dm.ArrayObject:
@@ -993,20 +1482,47 @@ class ShardedStream:
             return dm.ArrayObject(attrs, ("tick",))
 
     # -- reads: seq-ordered gather --------------------------------------------
-    def _gather(self) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
-        """All buffered rows across shards, merged in global seq order
-        (caller holds the coordinator lock)."""
+    @contextlib.contextmanager
+    def _all_shard_locks(self):
+        """Hold every shard ring's lock at once (acquired in shard-index
+        order) so a multi-shard read is a point-in-time cut: a commit
+        landing on one shard mid-read cannot evict sub-frontier rows
+        from a shard the reader has not reached yet.  Safe against the
+        writers: commits take one shard lock at a time and never while
+        holding another, so the index-ordered sweep cannot deadlock."""
+        with contextlib.ExitStack() as stack:
+            for shard in self._shards:
+                stack.enter_context(shard._lock)
+            yield
+
+    def _gather(self, upto: Optional[int] = None
+                ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+        """All buffered rows across shards with seq below ``upto``
+        (default: the committed frontier), merged in global seq order
+        (caller holds the coordinator lock).  The frontier filter is
+        what keeps concurrent-producer reads gap-free: a shard ring may
+        already hold a later block while an earlier block is still
+        publishing to a sibling shard — those rows stay invisible until
+        every predecessor committed.  All shard locks are held across
+        the sweep (point-in-time cut), so concurrent eviction cannot
+        punch holes below the frontier mid-read either."""
+        frontier = self.total_appended if upto is None else int(upto)
         seq_parts, col_parts = [], {f: [] for f in self.fields}
-        for shard in self._shards:
-            _, arrays = shard.ordered_arrays()
-            seq_parts.append(arrays[SEQ_FIELD])
-            for f in self.fields:
-                col_parts[f].append(arrays[f])
+        with self._all_shard_locks():
+            for shard in self._shards:
+                seq_parts.append(shard._ordered(SEQ_FIELD))
+                for f in self.fields:
+                    col_parts[f].append(shard._ordered(f))
         seqs = np.concatenate(seq_parts) if seq_parts else \
             np.zeros(0, np.float64)
+        cols = {f: np.concatenate(v) if v else np.zeros(0, np.float64)
+                for f, v in col_parts.items()}
+        keep = seqs < frontier
+        if not keep.all():
+            seqs = seqs[keep]
+            cols = {f: v[keep] for f, v in cols.items()}
         order = np.argsort(seqs, kind="stable")
-        return seqs[order], {f: np.concatenate(v)[order]
-                             for f, v in col_parts.items()}
+        return seqs[order], {f: v[order] for f, v in cols.items()}
 
     def _gather_range(self, s: int, e: int
                       ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
@@ -1022,10 +1538,11 @@ class ShardedStream:
         field the shard rings are sorted on: the reserved seq column
         always, and the ts field of an event-time stream (seqs are
         assigned in ts order at flush).  Caller holds the coordinator
-        lock."""
+        lock; all shard locks are held across the sweep, so the slices
+        are one point-in-time cut."""
         seq_parts, col_parts = [], {f: [] for f in self.fields}
-        for shard in self._shards:
-            with shard._lock:
+        with self._all_shard_locks():
+            for shard in self._shards:
                 a, b = shard._seq_bounds_locked(field, float(lo),
                                                 float(hi))
                 if b <= a:
@@ -1074,7 +1591,9 @@ class ShardedStream:
                          for f in self.fields}
                 return dm.ArrayObject(attrs, ("tick",))
             assert slide > 0
-            seqs, cols = self._gather()
+            # gather against the same frontier snapshot ``total`` — a
+            # block committing mid-call must not skew the suffix math
+            seqs, cols = self._gather(upto=total)
             # the contiguous suffix of the seq space still fully buffered
             contiguous = np.nonzero(
                 seqs != np.arange(total - seqs.shape[0], total))[0]
@@ -1101,9 +1620,10 @@ class ShardedStream:
         with self._lock:
             def compute(s: int, e: int) -> float:
                 partials: List[Tuple[float, int]] = []   # (value, rows)
-                for shard in self._shards:
-                    partials.append(self._shard_partial(shard, fn, field,
-                                                        s, e))
+                with self._all_shard_locks():   # point-in-time cut
+                    for shard in self._shards:
+                        partials.append(self._shard_partial(
+                            shard, fn, field, s, e))
                 rows = sum(c for _, c in partials)
                 if rows != size:
                     raise StreamException(
@@ -1124,26 +1644,29 @@ class ShardedStream:
     def _shard_partial(self, shard: Stream, fn: str, field: str,
                        s: int, e: int) -> Tuple[float, int]:
         """One shard's (partial value, row count) for global seqs [s, e).
-        Shard rings are seq-sorted (appends serialize on the coordinator),
-        so the slice bounds come from an O(log n) ring binary search."""
-        with shard._lock:
-            a_off, b_off = shard._seq_bounds_locked(SEQ_FIELD, float(s),
-                                                    float(e))
-            if b_off <= a_off:
-                return 0.0, 0
-            count = b_off - a_off
-            if fn in ("sum", "avg"):
-                return shard._range_sum_locked(field, a_off, b_off), count
-            if fn == "count":
-                return float(count), count
-            idxs = (shard._pos(0) + np.arange(a_off, b_off)) \
-                % shard.capacity
-            sl = shard._cols[field][idxs]
-            return float(sl.min() if fn == "min" else sl.max()), count
+        Shard rings are seq-sorted (blocks publish in reservation
+        order), so the slice bounds come from an O(log n) ring binary
+        search.  Caller holds the shard's lock (via
+        ``_all_shard_locks``: the partials form one cut)."""
+        a_off, b_off = shard._seq_bounds_locked(SEQ_FIELD, float(s),
+                                                float(e))
+        if b_off <= a_off:
+            return 0.0, 0
+        count = b_off - a_off
+        if fn in ("sum", "avg"):
+            return shard._range_sum_locked(field, a_off, b_off), count
+        if fn == "count":
+            return float(count), count
+        idxs = (shard._pos(0) + np.arange(a_off, b_off)) \
+            % shard.capacity
+        sl = shard._cols[field][idxs]
+        return float(sl.min() if fn == "min" else sl.max()), count
 
     # -- rate & stats ---------------------------------------------------------
     def rate(self) -> float:
-        with self._lock:
+        # concurrent producers append rate samples outside the
+        # coordinator lock, so the history has its own tiny lock
+        with self._rate_lock:
             return _recent_rate(self._append_times)
 
     def stats(self) -> Dict[str, Any]:
@@ -1153,6 +1676,7 @@ class ShardedStream:
                 "capacity": sum(s.capacity for s in self._shards),
                 "appended": self.total_appended,
                 "dropped": self.total_dropped,
+                "ingest_concurrency": self.ingest_concurrency(),
                 "shards": self.shard_stats(),
             }
             if self.ts_field is not None:
@@ -1182,10 +1706,15 @@ class ShardedStream:
     def migrate_shard(self, idx: int, migrator, engines: Dict[str, Any],
                       to_engine: str):
         """Move shard ``idx``'s live ring buffer to another StreamEngine
-        through the Migrator's ``stream`` route, holding the coordinator
-        lock so in-flight standing queries never observe a half-moved
-        shard; seq watermark and drop counters travel with the state
-        (the Migrator keeps the catalog's placement truthful)."""
+        through the Migrator's ``stream`` route.  The coordinator lock
+        keeps standing queries from observing a half-moved shard, and
+        the shard's ordered committer is **paused** across the move:
+        every seq block reserved before the pause drains into the old
+        ring first (it travels with the exported state), blocks
+        reserved during the move wait and then publish into the new
+        ring — in-flight reservations are carried, never lost.  Seq
+        watermark and drop counters travel with the state (the Migrator
+        keeps the catalog's placement truthful)."""
         from repro.core.migrator import MigrationParams
         with self._lock:
             if not 0 <= idx < len(self._shards):
@@ -1202,11 +1731,16 @@ class ShardedStream:
                 raise ValueError(
                     f"shard {idx} of {self.name!r} already on {to_engine}")
             obj_name = self.shard_name(idx)
-            result = migrator.migrate(
-                engines[src_name], obj_name, engines[to_engine], obj_name,
-                MigrationParams(method="stream"))
-            self._shards[idx] = engines[to_engine].get(obj_name)
-            self._engines[idx] = to_engine
+            committer = self._committers[idx]
+            committer.pause()        # drain in-flight blocks, hold later
+            try:
+                result = migrator.migrate(
+                    engines[src_name], obj_name, engines[to_engine],
+                    obj_name, MigrationParams(method="stream"))
+                self._shards[idx] = engines[to_engine].get(obj_name)
+                self._engines[idx] = to_engine
+            finally:
+                committer.resume()   # held blocks publish to the new ring
             self.migrations += 1
             # the destination now participates: it must resolve the
             # logical name too (shard-transparent reads, planner pin)

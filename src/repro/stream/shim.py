@@ -18,6 +18,10 @@ stored on a ``StreamEngine``:
   aggregate(<expr>, fn(attr))    -> dm.ArrayObject (fn: count/sum/avg/
                                     min/max over a window expression)
   rate(S)                        -> dm.Table   (rows_per_second + counters)
+  ingest(S)                      -> dm.Table   (multi-producer ingest
+                                    health: producers open/peak, seq
+                                    blocks reserved, in-flight rows,
+                                    ordered-commit waits)
   watermark(S)                   -> dm.Table   (low watermark + late/
                                     pending counters; needs ts_field)
   flush(S[, to_ts])              -> dm.Table   (punctuation: force the
@@ -306,6 +310,10 @@ def execute_stream(engine: Engine, query: str):
             "rows": jnp.asarray([float(stats["rows"])]),
             "appended": jnp.asarray([float(stats["appended"])]),
             "dropped": jnp.asarray([float(stats["dropped"])])})
+    if fn == "ingest":
+        stream = _get_stream(engine, args[0])
+        return dm.Table({k: jnp.asarray([float(v)])
+                         for k, v in stream.ingest_concurrency().items()})
     if fn == "aggregate":
         if len(args) != 2:
             raise ValueError(f"aggregate needs (expr, fn(attr)): {q!r}")

@@ -94,3 +94,82 @@ def test_committed_baseline_matches_the_ci_invocation():
     meds = report_medians(baseline)
     assert all(v > 0 for v in meds.values())
     assert any(name == "stream/join_ew512" for _, name in meds)
+
+
+# -- ratio-type rows (self-normalizing, bigger is better) ---------------------
+RATIO_BASE = {
+    "suites": {
+        "stream": [
+            {"name": "stream/ingest", "us_per_call": 100.0,
+             "derived": "", "kind": "time"},
+            {"name": "stream/ingest_producers4", "us_per_call": 1.5,
+             "derived": "", "kind": "ratio"},
+        ],
+    },
+    "meta": {}, "failures": [],
+}
+
+
+def test_ratio_row_regresses_when_ratio_drops():
+    """A ratio row (concurrent/serial throughput) regresses when the
+    ratio FALLS — the direction is inverted vs wall-clock rows."""
+    cur = copy.deepcopy(RATIO_BASE)
+    cur["suites"]["stream"][1]["us_per_call"] = 1.0      # -33% < -25%
+    cmp = compare_reports(RATIO_BASE, cur, tolerance=0.25)
+    assert cmp["regressions"] == ["stream/ingest_producers4"]
+    row = next(r for r in cmp["rows"]
+               if r["name"] == "stream/ingest_producers4")
+    assert row["kind"] == "ratio" and row["regressed"]
+
+
+def test_ratio_row_improvement_is_a_higher_ratio():
+    cur = copy.deepcopy(RATIO_BASE)
+    cur["suites"]["stream"][1]["us_per_call"] = 2.0      # +33% better
+    cmp = compare_reports(RATIO_BASE, cur, tolerance=0.25)
+    assert cmp["regressions"] == []
+    assert cmp["improvements"] == ["stream/ingest_producers4"]
+
+
+def test_ratio_row_best_sample_vetoes_noise():
+    """One healthy sample among noisy ones vetoes a ratio alarm (the
+    max-sample analog of the wall-clock min-sample veto)."""
+    cur = copy.deepcopy(RATIO_BASE)
+    cur["suites"]["stream"] = [
+        {"name": "stream/ingest_producers4", "us_per_call": v,
+         "derived": "", "kind": "ratio"}
+        for v in (0.9, 1.0, 1.4)]            # median 1.0, best 1.4
+    cmp = compare_reports(RATIO_BASE, cur, tolerance=0.25)
+    assert cmp["regressions"] == []
+    # ...but a consistently collapsed ratio still fails
+    cur["suites"]["stream"] = [
+        {"name": "stream/ingest_producers4", "us_per_call": v,
+         "derived": "", "kind": "ratio"}
+        for v in (0.8, 0.9, 1.0)]
+    assert compare_reports(RATIO_BASE, cur,
+                           tolerance=0.25)["regressions"] \
+        == ["stream/ingest_producers4"]
+
+
+def test_ratio_kind_read_from_baseline_when_current_omits_it():
+    """Old reports without a kind field compare as wall-clock; a kind
+    recorded on either side is honored (current wins)."""
+    cur = copy.deepcopy(RATIO_BASE)
+    del cur["suites"]["stream"][1]["kind"]
+    cur["suites"]["stream"][1]["us_per_call"] = 1.0
+    cmp = compare_reports(RATIO_BASE, cur, tolerance=0.25)
+    # baseline's kind=ratio still applies: a falling ratio regresses
+    assert cmp["regressions"] == ["stream/ingest_producers4"]
+
+
+def test_committed_baseline_has_the_producer_ratio_rows():
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "BASELINE.json")
+    with open(path) as fh:
+        baseline = json.load(fh)
+    from benchmarks.run import report_kinds
+    kinds = report_kinds(baseline)
+    assert kinds[("stream", "stream/ingest_producers2")] == "ratio"
+    assert kinds[("stream", "stream/ingest_producers4")] == "ratio"
+    meds = report_medians(baseline)
+    # the dev-container guarantee: concurrency wins at 2 producers
+    assert meds[("stream", "stream/ingest_producers2")] >= 1.0

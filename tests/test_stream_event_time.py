@@ -456,3 +456,111 @@ def test_paired_mimic_feed_runs_standing_join_without_late_rows():
     snap = abp.snapshot()
     np.testing.assert_array_equal(np.asarray(snap.columns["ts"]),
                                   np.arange(8 * 32, dtype=float))
+
+
+# -- idle-shard watermark timeout ---------------------------------------------
+def _fake_clock(*streams):
+    """Replace the streams' monotonic clock with a controllable one."""
+    state = {"t": 1000.0}
+
+    def now():
+        return state["t"]
+
+    for s in streams:
+        s._now = now
+    return state
+
+
+def test_idle_shard_stalls_then_advances_after_timeout():
+    """The ROADMAP idle-timeout: one quiet key range stalls the
+    min-watermark (windows stay open) until ``idle_timeout`` elapses —
+    then the idle shard is excluded and the watermark jumps without a
+    manual flush()."""
+    bd = default_deployment()
+    sh = bd.register_stream(
+        "streamstore0", "idle.stream", ("ts", "k"), capacity=1024,
+        shards=2, num_engines=2, shard_key="k",
+        ts_field="ts", max_delay=1.0, idle_timeout=5.0)
+    clock = _fake_clock(sh)
+    # both key ranges feed: k=0 -> shard 0, k=1 -> shard 1
+    sh.append({"ts": [0.0, 1.0], "k": [0.0, 1.0]})
+    sh.append({"ts": [2.0, 2.5], "k": [0.0, 1.0]})
+    wm0 = sh.watermark
+    assert wm0 == 1.0                       # min(2.0, 2.5) - 1.0
+    # now only shard 0's range keeps feeding: the stream min stalls at
+    # shard 1's last timestamp however far shard 0 advances
+    for step in range(3):
+        clock["t"] += 1.0
+        sh.append({"ts": [10.0 + step], "k": [0.0]})
+    assert sh.watermark == 1.5, "quiet shard should stall the min"
+    # cross the idle threshold: the next arrival recomputes the basis
+    # with shard 1 excluded and the watermark jumps to shard 0's frontier
+    clock["t"] += 10.0
+    sh.append({"ts": [13.0], "k": [0.0]})
+    assert sh.watermark == 12.0             # 13.0 - max_delay
+    # shard 1's range coming back re-enters the min (no longer idle);
+    # below-watermark rows on it are late now — the punctuation cost
+    out = sh.append({"ts": [5.0], "k": [1.0]})
+    assert out["late"] == 1
+    assert sh.watermark == 12.0
+    sh.close()
+
+
+def test_idle_advance_via_runtime_tick_without_any_arrivals():
+    """A stream whose feeds ALL stop still advances: StreamRuntime.tick
+    drives advance_idle_watermark(), so buffered rows flush and a
+    watermark-gated standing query unsticks with no manual flush()."""
+    bd = default_deployment()
+    sh = bd.register_stream(
+        "streamstore0", "idle.tick", ("ts", "k"), capacity=1024,
+        shards=2, num_engines=2, shard_key="k",
+        ts_field="ts", max_delay=2.0, idle_timeout=5.0)
+    clock = _fake_clock(sh)
+    cq = bd.register_continuous(
+        "bdstream(aggregate(ewindow(idle.tick, 2), count(ts)))",
+        name="idle_count")
+    sh.append({"ts": [0.0, 1.0, 2.0, 3.0], "k": [0.0, 1.0, 0.0, 1.0]})
+    bd.streams.tick()
+    # watermark = min(shard maxes 2.0, 3.0) - max_delay = 0.0: the first
+    # [0, 4) window is open, the standing query errors (no closed
+    # ewindow yet) but the tick carries on
+    assert sh.watermark == 0.0
+    assert cq.executions + cq.errors >= 1
+    # feeds stop; before the timeout a tick changes nothing...
+    clock["t"] += 2.0
+    bd.streams.tick()
+    assert sh.watermark == 0.0 and sh._pending_rows > 0
+    # ...after it, the tick itself flushes the stream out
+    clock["t"] += 10.0
+    ran = bd.streams.tick()
+    assert sh.watermark == 3.0 and sh._pending_rows == 0
+    # the SAME tick that advanced the idle watermark ran the gated
+    # query successfully: ewindow [0, 2) is closed now and holds ts 0, 1
+    assert [name for name, _ in ran] == ["idle_count"]
+    assert float(np.asarray(
+        cq.last_value.attrs["count_ts"])[0]) == 2.0
+    sh.close()
+
+
+def test_unsharded_idle_timeout_flushes_buffered_tail():
+    """idle_timeout on a plain stream: after T seconds of silence the
+    insertion buffer flushes in full (the automatic flush())."""
+    s = Stream("idle.plain", ("ts",), capacity=64,
+               ts_field="ts", max_delay=5.0, idle_timeout=3.0)
+    clock = _fake_clock(s)
+    s.append({"ts": [1.0, 4.0, 2.0]})
+    assert s._pending_rows == 3             # watermark -1.0, nothing out
+    clock["t"] += 1.0
+    assert s.advance_idle_watermark()["flushed"] == 0   # not idle yet
+    clock["t"] += 5.0
+    out = s.advance_idle_watermark()
+    assert out["flushed"] == 3 and s._pending_rows == 0
+    assert s.watermark == 4.0
+    np.testing.assert_array_equal(
+        np.asarray(s.snapshot().columns["ts"]), [1.0, 2.0, 4.0])
+
+
+def test_idle_timeout_ignored_without_event_time_axis():
+    s = Stream("idle.plainest", ("v",), capacity=8, idle_timeout=1.0)
+    s.append({"v": [1.0]})
+    assert s.advance_idle_watermark() == {"flushed": 0, "dropped": 0}

@@ -1,0 +1,186 @@
+"""Tier-1 line-coverage gate for the streaming + core middleware.
+
+Runs the tier-1 pytest suite with line coverage over
+``src/repro/stream/`` and ``src/repro/core/`` and fails when the
+combined percentage drops below the floor committed in
+``pyproject.toml`` (``[tool.repro] coverage_floor``):
+
+  PYTHONPATH=src python tools/coverage_gate.py [--floor N] [pytest args]
+
+Two measurement backends, same gate:
+
+* **pytest-cov** (CI: installed via the ``cov`` extra) — the canonical
+  number the committed floor is calibrated against.
+* **stdlib tracer fallback** — when pytest-cov is absent (the dev
+  container bakes no extra wheels), a ``sys.monitoring`` /
+  ``sys.settrace`` tracer collects executed lines in-process and the
+  denominator comes from each module's code-object line tables.  Close
+  to pytest-cov's number but not identical (it cannot see lines run
+  only at import time before tracing starts, and counts line tables
+  slightly differently) — treat it as a calibration aid, and refresh
+  the floor from CI's pytest-cov output (procedure in
+  docs/OPERATIONS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+from typing import Dict, Iterable, Set
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TARGET_DIRS = ("src/repro/stream", "src/repro/core")
+COV_PACKAGES = ("repro.stream", "repro.core")
+
+
+def committed_floor() -> float:
+    """The [tool.repro] coverage_floor value from pyproject.toml (a
+    small regex parse: python 3.10 has no stdlib TOML reader)."""
+    text = open(os.path.join(REPO, "pyproject.toml")).read()
+    m = re.search(r"^\[tool\.repro\]\s*$(.*?)(?:^\[|\Z)", text,
+                  re.MULTILINE | re.DOTALL)
+    if not m:
+        raise SystemExit("pyproject.toml has no [tool.repro] section")
+    f = re.search(r"^coverage_floor\s*=\s*([0-9.]+)", m.group(1),
+                  re.MULTILINE)
+    if not f:
+        raise SystemExit("[tool.repro] has no coverage_floor")
+    return float(f.group(1))
+
+
+def target_files() -> Set[str]:
+    files = set()
+    for d in TARGET_DIRS:
+        for root, _, names in os.walk(os.path.join(REPO, d)):
+            files.update(os.path.join(root, n) for n in names
+                         if n.endswith(".py"))
+    return files
+
+
+def executable_lines(path: str) -> Set[str]:
+    """Line numbers the compiler placed in the module's code-object
+    line tables (the denominator of the stdlib backend)."""
+    code = compile(open(path).read(), path, "exec")
+    lines: Set[int] = set()
+    stack = [code]
+    while stack:
+        co = stack.pop()
+        lines.update(ln for _, ln in __import__("dis")
+                     .findlinestarts(co) if ln is not None)
+        stack.extend(c for c in co.co_consts if hasattr(c, "co_code"))
+    return lines
+
+
+def run_pytest_cov(pytest_args: Iterable[str]) -> float:
+    """Run tier-1 under pytest-cov; returns the combined percent over
+    the target packages (the canonical gate number)."""
+    report = os.path.join(tempfile.mkdtemp(), "coverage.json")
+    cmd = [sys.executable, "-m", "pytest", "-q",
+           *(f"--cov={p}" for p in COV_PACKAGES),
+           f"--cov-report=json:{report}", *pytest_args]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(cmd, cwd=REPO, env=env)
+    if proc.returncode not in (0,):
+        raise SystemExit(f"tier-1 tests failed (exit {proc.returncode}) "
+                         f"— fix the tests before reading coverage")
+    with open(report) as fh:
+        data = json.load(fh)
+    totals = data["totals"]
+    return float(totals["percent_covered"])
+
+
+def run_stdlib_tracer(pytest_args: Iterable[str]) -> float:
+    """In-process fallback: trace executed lines of the target files
+    while pytest runs, denominator from the compiler's line tables."""
+    import threading
+
+    files = target_files()
+    executed: Dict[str, Set[int]] = {p: set() for p in files}
+
+    if sys.version_info >= (3, 12):
+        mon = sys.monitoring
+        tool = mon.COVERAGE_ID
+        mon.use_tool_id(tool, "coverage-gate")
+
+        def on_line(code, line):
+            fn = code.co_filename
+            if fn in executed:
+                executed[fn].add(line)
+            else:
+                return mon.DISABLE
+            return None
+
+        mon.register_callback(tool, mon.events.LINE, on_line)
+        mon.set_events(tool, mon.events.LINE)
+    else:
+        def tracer(frame, event, arg):
+            if frame.f_code.co_filename not in executed:
+                return None              # skip this frame entirely
+
+            def line_tracer(fr, ev, a):
+                if ev == "line":
+                    executed[fr.f_code.co_filename].add(fr.f_lineno)
+                return line_tracer
+
+            if event == "line":
+                executed[frame.f_code.co_filename].add(frame.f_lineno)
+            return line_tracer
+
+        threading.settrace(tracer)
+        sys.settrace(tracer)
+
+    import pytest
+    rc = pytest.main(["-q", "-p", "no:cacheprovider", *pytest_args])
+
+    if sys.version_info >= (3, 12):
+        sys.monitoring.set_events(sys.monitoring.COVERAGE_ID, 0)
+        sys.monitoring.free_tool_id(sys.monitoring.COVERAGE_ID)
+    else:
+        sys.settrace(None)
+        threading.settrace(None)         # type: ignore[arg-type]
+    if rc != 0:
+        raise SystemExit(f"tier-1 tests failed (exit {rc}) — fix the "
+                         f"tests before reading coverage")
+
+    total_exec = total_hit = 0
+    for path in sorted(files):
+        lines = executable_lines(path)
+        hits = executed[path] & lines
+        total_exec += len(lines)
+        total_hit += len(hits)
+        rel = os.path.relpath(path, REPO)
+        pct = 100.0 * len(hits) / len(lines) if lines else 100.0
+        print(f"  {rel:<44} {pct:5.1f}% ({len(hits)}/{len(lines)})")
+    return 100.0 * total_hit / total_exec if total_exec else 100.0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--floor", type=float, default=None,
+                    help="override the committed coverage floor")
+    ap.add_argument("pytest_args", nargs="*",
+                    help="extra args forwarded to pytest")
+    args = ap.parse_args()
+    floor = args.floor if args.floor is not None else committed_floor()
+    try:
+        import pytest_cov                              # noqa: F401
+        backend = "pytest-cov"
+        percent = run_pytest_cov(args.pytest_args)
+    except ImportError:
+        backend = "stdlib-tracer (calibration aid — CI uses pytest-cov)"
+        sys.path.insert(0, os.path.join(REPO, "src"))
+        percent = run_stdlib_tracer(args.pytest_args)
+    status = "OK" if percent >= floor else "FAIL"
+    print(f"coverage[{backend}] src/repro/{{stream,core}}: "
+          f"{percent:.2f}% (floor {floor:.1f}%) -> {status}")
+    return 0 if percent >= floor else 3
+
+
+if __name__ == "__main__":
+    sys.exit(main())
