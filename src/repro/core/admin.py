@@ -63,6 +63,10 @@ def status(bd: BigDawg) -> Dict[str, Any]:
     # (the Monitor's per-tick copy of stream.ingest_concurrency())
     out["streams"]["ingest_concurrency"] = {
         k: dict(v) for k, v in bd.monitor.ingest_stats.items()}
+    # compiled query path: active backend plus plan-compile/cache-hit/
+    # fallback counters (the Monitor's per-tick copy of
+    # repro.stream.compile.stats(); fallbacks stay 0 on a healthy lane)
+    out["streams"]["query_backend"] = dict(bd.monitor.jit_stats)
     out["plan_cache"] = dict(bd.planner.plan_cache.stats(),
                              capacity=cfg.cache_size,
                              max_age_seconds=cfg.cache_max_age_seconds)

@@ -68,6 +68,11 @@ class Monitor:
         # waits (StreamRuntime.tick feeds this from
         # stream.ingest_concurrency(); admin.status()["streams"] shows it)
         self.ingest_stats: Dict[str, Dict[str, int]] = {}
+        # compiled-query-path health: the stream/compile stats() block
+        # (backend, compiles, cache hits, fallbacks + reasons).  One
+        # process-wide dict, not per-stream — the jit plan cache is keyed
+        # by stream identity internally but its counters are global.
+        self.jit_stats: Dict[str, Any] = {}
 
     # -- benchmark API (paper naming) ----------------------------------------
     def add_benchmarks(self, signature: Signature, lean: bool,
@@ -222,6 +227,15 @@ class Monitor:
         rows reserved, in-flight rows, ordered-commit waits)."""
         with self._lock:
             self.ingest_stats[stream_name] = dict(stats)
+
+    def observe_jit(self, stats: Dict[str, Any]) -> None:
+        """Record the compiled standing-query path's counters (the
+        ``repro.stream.compile.stats()`` block: active backend, plan
+        compiles/cache hits/executions, interpreter fallbacks and their
+        reasons).  StreamRuntime.tick feeds this once per tick;
+        admin.status()["streams"]["query_backend"] shows it."""
+        with self._lock:
+            self.jit_stats = dict(stats)
 
     @staticmethod
     def shard_load(stats: Dict[str, float]) -> float:

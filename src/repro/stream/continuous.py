@@ -324,6 +324,11 @@ class StreamRuntime:
             self.monitor.observe_watermark(
                 name, stream.watermark, late=stream.total_late,
                 pending=stream._pending_rows)
+        # compiled-query-path counters (backend, compiles, cache hits,
+        # fallbacks) — one global block, refreshed every tick so the
+        # Monitor/admin view tracks the jit lane's health live
+        from repro.stream import compile as query_compile
+        self.monitor.observe_jit(query_compile.stats())
         return ran
 
     def run_ticks(self, n: int) -> List[List[Tuple[str, Any]]]:

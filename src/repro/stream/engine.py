@@ -62,6 +62,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import math
+import os
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -228,14 +229,31 @@ class _OrderedCommitter:
     ``pause()`` is the live-migration barrier: it drains every already-
     issued ticket (in-flight blocks publish to the old ring) and holds
     later tickets back until ``resume()`` — those blocks carry over to
-    whatever object the commit closure resolves after the swap."""
+    whatever object the commit closure resolves after the swap.
+
+    Stall stealing: a producer that reserved a ticket and then died
+    (hard-killed thread, crashed process stage) would otherwise park
+    every later ticket on its lane forever.  Any waiter (commit,
+    quiesce, pause) that sees **zero lane progress** for
+    ``stall_timeout`` seconds steals the head ticket if its owner never
+    entered ``commit()`` — the lane advances over the hole and the
+    stolen ticket's ``commit``, should the owner revive, raises instead
+    of double-advancing the lane.  Tickets whose owners are alive
+    (waiting, or running their ring write) are never stolen.
+    ``REPRO_COMMIT_STALL_TIMEOUT`` (seconds, default 5.0) tunes it;
+    0 disables stealing."""
 
     def __init__(self) -> None:
         self._cond = threading.Condition(threading.Lock())
         self._next_ticket = 0
         self._committed = 0
         self._pause_at: Optional[int] = None
+        self._entered: set = set()     # tickets with a live owner inside commit
+        self._stolen: set = set()      # tickets advanced over after a stall
         self.waits = 0             # commits that had to block (contention)
+        self.steals = 0            # tickets stolen from presumed-dead owners
+        self.stall_timeout = float(os.environ.get(
+            "REPRO_COMMIT_STALL_TIMEOUT", "5.0"))
 
     def issue(self) -> int:
         with self._cond:
@@ -247,11 +265,40 @@ class _OrderedCommitter:
         return (self._committed == ticket
                 and (self._pause_at is None or ticket < self._pause_at))
 
+    def _wait_or_steal_locked(self, done, limit: int) -> None:
+        """Wait (holding the condition) until ``done()``; whenever a
+        full stall interval passes with no lane progress at all, steal
+        never-entered tickets from the head up to ``limit``.  With
+        stealing disabled this is a plain ``wait_for``."""
+        timeout = self.stall_timeout if self.stall_timeout > 0 else None
+        while not done():
+            if not self._cond.wait(timeout=timeout):
+                # a timeout means no notify — so no commit on this lane
+                # — for stall_timeout seconds: the head owner is dead
+                # or wedged; steal it if it never entered commit()
+                self._steal_stalled_locked(limit)
+
+    def _steal_stalled_locked(self, limit: int) -> None:
+        stole = False
+        while (self._committed < limit
+               and self._committed < self._next_ticket
+               and (self._pause_at is None
+                    or self._committed < self._pause_at)
+               and self._committed not in self._entered):
+            self._stolen.add(self._committed)
+            self._committed += 1
+            self.steals += 1
+            stole = True
+        if stole:
+            self._cond.notify_all()
+
     def commit(self, ticket: int, fn):
         """Publish ticket's block: wait for its turn, run ``fn``, release
         the next.  ``fn``'s return value is passed through; the lane
         advances even when ``fn`` raises (a poisoned block must not wedge
-        every later producer forever).
+        every later producer forever).  Raises StreamException — without
+        running ``fn`` or advancing the lane — when the ticket was
+        stolen after a stall (the lane already moved past it).
 
         ``fn`` runs OUTSIDE the condition lock: once it is ticket's turn
         no other commit can run on this lane until ``_committed``
@@ -260,30 +307,52 @@ class _OrderedCommitter:
         never blocks behind an in-progress ring write, keeping the
         reservation path counter-bumps-only for real."""
         with self._cond:
+            if ticket in self._stolen:
+                self._stolen.discard(ticket)
+                raise StreamException(
+                    f"commit ticket {ticket} was stolen after a "
+                    f"{self.stall_timeout:g}s stall (producer presumed "
+                    f"dead); its block is a permanent hole")
+            self._entered.add(ticket)
             if not self._turn(ticket):
                 self.waits += 1
-                self._cond.wait_for(lambda: self._turn(ticket))
+                self._wait_or_steal_locked(
+                    lambda: self._turn(ticket), ticket)
         try:
             return fn()
         finally:
             with self._cond:
+                self._entered.discard(ticket)
                 self._committed += 1
                 self._cond.notify_all()
 
+    def consumed(self, ticket: int) -> bool:
+        """True once the lane moved past ``ticket`` (committed or
+        stolen)."""
+        with self._cond:
+            return self._committed > ticket
+
+    def was_stolen(self, ticket: int) -> bool:
+        with self._cond:
+            return ticket in self._stolen
+
     def quiesce(self) -> None:
         """Drain: wait until every ticket issued so far has committed
-        (no pause — new tickets keep flowing afterwards)."""
+        (no pause — new tickets keep flowing afterwards; tickets of
+        dead producers are stolen rather than waited on forever)."""
         with self._cond:
             barrier = self._next_ticket
-            self._cond.wait_for(lambda: self._committed >= barrier)
+            self._wait_or_steal_locked(
+                lambda: self._committed >= barrier, barrier)
 
     def pause(self) -> None:
         """Drain issued tickets and hold later ones until resume()."""
         with self._cond:
             assert self._pause_at is None, "committer already paused"
             self._pause_at = self._next_ticket
-            self._cond.wait_for(
-                lambda: self._committed >= self._pause_at)
+            self._wait_or_steal_locked(
+                lambda: self._committed >= self._pause_at,
+                self._pause_at)
 
     def resume(self) -> None:
         with self._cond:
@@ -367,19 +436,25 @@ class _MultiProducerIngest:
     def _in_flight_rows(self) -> int:           # per-class override
         raise NotImplementedError
 
+    def _commit_steals(self) -> int:            # per-class override
+        raise NotImplementedError
+
     def ingest_concurrency(self) -> Dict[str, int]:
         """Reservation/contention counters of the multi-producer ingest
         path: how many producer handles are (were) open, how many seq
         blocks/rows have been reserved, how many are reserved but not
-        yet published (``in_flight_rows``), and how many commits had to
+        yet published (``in_flight_rows``), how many commits had to
         wait for an earlier block (``commit_waits`` — the contention
-        signal; 0 under a single producer)."""
+        signal; 0 under a single producer), and how many tickets were
+        stolen from stalled producers (``commit_steals`` — nonzero only
+        after a producer died mid-append)."""
         return {"producers_open": self.producers_open,
                 "producers_peak": self.producers_peak,
                 "blocks_reserved": self.blocks_reserved,
                 "rows_reserved": self.rows_reserved,
                 "in_flight_rows": self._in_flight_rows(),
-                "commit_waits": self._commit_waits()}
+                "commit_waits": self._commit_waits(),
+                "commit_steals": self._commit_steals()}
 
 
 class Stream(_MultiProducerIngest):
@@ -652,6 +727,9 @@ class Stream(_MultiProducerIngest):
     # -- ingest_concurrency hooks (see _MultiProducerIngest) -------------------
     def _commit_waits(self) -> int:
         return self._committer.waits
+
+    def _commit_steals(self) -> int:
+        return self._committer.steals
 
     def _in_flight_rows(self) -> int:
         # reserved-but-unpublished rows; event-time streams reserve at
@@ -1025,6 +1103,13 @@ class ShardedStream(_MultiProducerIngest):
         self._committers = [_OrderedCommitter() for _ in self._shards]
         self._frontier = threading.Condition(threading.Lock())
         self._finished: Dict[int, int] = {}      # block start -> rows
+        # block start -> (rows, {shard: ticket}) for reserved-but-not-
+        # finished blocks: lets the frontier abandon a block whose
+        # producer died mid-stage once its stolen tickets prove it can
+        # never complete (same permanent-hole semantics as a staging
+        # failure)
+        self._pending_blocks: Dict[int, Tuple[int, Dict[int, int]]] = {}
+        self.blocks_abandoned = 0
         # the scatter fan-out pool serves ONE producer at a time (pool
         # tasks block on commit order; sharing it across producers could
         # queue an earlier producer's ring write behind a later
@@ -1150,6 +1235,8 @@ class ShardedStream(_MultiProducerIngest):
             tickets = {i: self._committers[i].issue() for i in touched}
             self.blocks_reserved += 1
             self.rows_reserved += n
+        with self._frontier:
+            self._pending_blocks[t] = (n, dict(tickets))
         # -- stage: partition into per-shard payloads (no locks held)
         try:
             parts = self._partition(cols, n, t, owner)
@@ -1180,13 +1267,55 @@ class ShardedStream(_MultiProducerIngest):
 
     def _complete_block(self, t: int, n: int) -> None:
         """Record block [t, t+n) as fully published and advance the
-        committed frontier over every contiguous finished block."""
+        committed frontier over every contiguous finished block — then
+        reap any dead block now parked at the frontier, so one killed
+        producer can't make every later block invisible forever."""
         with self._frontier:
             self._finished[t] = n
-            while self.total_appended in self._finished:
-                self.total_appended += self._finished.pop(
-                    self.total_appended)
+            self._advance_frontier_locked()
+            self._reap_stalled_locked()
             self._frontier.notify_all()
+
+    def _advance_frontier_locked(self) -> None:
+        while self.total_appended in self._finished:
+            t = self.total_appended
+            self.total_appended += self._finished.pop(t)
+            self._pending_blocks.pop(t, None)
+
+    def _reap_stalled_locked(self) -> int:
+        """Abandon frontier-blocking blocks that can never complete:
+        every commit ticket consumed, at least one by *stealing* (the
+        producer died before publishing).  Their seqs become a
+        permanent hole — exactly the staging-failure semantics — and
+        every later finished block becomes visible.  Returns the number
+        of blocks abandoned."""
+        reaped = 0
+        while True:
+            entry = self._pending_blocks.get(self.total_appended)
+            if entry is None or self.total_appended in self._finished:
+                break
+            n, tickets = entry
+            if not all(self._committers[i].consumed(tk)
+                       for i, tk in tickets.items()):
+                break
+            if not any(self._committers[i].was_stolen(tk)
+                       for i, tk in tickets.items()):
+                break
+            self._pending_blocks.pop(self.total_appended)
+            self.total_appended += n
+            self.blocks_abandoned += 1
+            reaped += 1
+            self._advance_frontier_locked()
+        return reaped
+
+    def reap_stalled(self) -> int:
+        """Advance the frontier over blocks abandoned by dead producers
+        (see _reap_stalled_locked); safe to call any time."""
+        with self._frontier:
+            reaped = self._reap_stalled_locked()
+            if reaped:
+                self._frontier.notify_all()
+        return reaped
 
     def _touched_shards(self, t: int, n: int) -> List[int]:
         """Round-robin shards receiving rows of seq block [t, t+n) —
@@ -1302,8 +1431,16 @@ class ShardedStream(_MultiProducerIngest):
     def _commit_waits(self) -> int:
         return sum(c.waits for c in self._committers)
 
+    def _commit_steals(self) -> int:
+        return sum(c.steals for c in self._committers)
+
     def _in_flight_rows(self) -> int:
         return self.reserved - self.total_appended
+
+    def ingest_concurrency(self) -> Dict[str, int]:
+        out = super().ingest_concurrency()
+        out["blocks_abandoned"] = self.blocks_abandoned
+        return out
 
     # -- event-time ingest: coordinator insertion buffer ----------------------
     def _append_event_time(self, cols: Dict[str, np.ndarray],

@@ -1,0 +1,158 @@
+"""Pallas kernels for the compiled streaming path.
+
+Two kernels back the device lowerings in ``stream/compile.py``, written
+in the house idiom (``kernels/mamba_scan``: fori_loop carry over a VMEM
+block, ``@pl.when`` guards; ``kernels/flash_attention``: per-block
+operand narrowing before the inner scan):
+
+  * ``window_minmax`` — the rolling-aggregate scan: per-window min/max
+    over stacked window rows ``(W, size)``.  min/max are exactly
+    associative, so any evaluation order is bit-identical to numpy's —
+    the only rolling aggregates that may leave the cumulative-ring host
+    path without breaking the jitted ≡ interpreted invariant (sum/avg
+    are order-sensitive and stay on the ring; see compile.py).
+  * ``join_bounds`` — the banded interval-join bound search: for every
+    left timestamp, the ``[lo, hi)`` slice of the *sorted* right
+    timestamps within ``tol``.  A branchless bisection (fori_loop over
+    ceil(log2 n) halvings), bit-identical to ``searchsorted``
+    left/right because both resolve ties the same way on exact float64
+    comparisons.
+
+Each kernel ships with a plain-jnp reference (``*_ref``) used as the
+default lowering; the Pallas path is opt-in via ``REPRO_STREAM_PALLAS=1``
+because on CPU the kernels run in interpret mode (Mosaic is TPU-only),
+which is correct but slower than XLA's fused jnp — the flag exists so
+TPU hosts get the real kernels and CI can parity-test both paths.
+Gates cleanly when jax is absent (``AVAILABLE`` False).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+try:                                         # gate: jax may be absent
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    AVAILABLE = True
+except Exception:                            # noqa: BLE001 — optional dep
+    jax = jnp = pl = None                    # type: ignore
+    AVAILABLE = False
+
+PALLAS_ENV = "REPRO_STREAM_PALLAS"
+_WINDOW_BLOCK = 8                            # windows per grid step
+
+
+def enabled() -> bool:
+    """True when the Pallas lowerings should replace the jnp refs."""
+    return AVAILABLE and bool(os.environ.get(PALLAS_ENV, "").strip())
+
+
+def _steps(n: int) -> int:
+    """Bisection iterations that pin [lo, hi) to width <= 1 from width
+    n: ceil(log2(n)) with a floor of 1."""
+    s = 1
+    while (1 << s) < n:
+        s += 1
+    return s
+
+
+# -- rolling-aggregate scan -------------------------------------------------
+def window_minmax_ref(windows, is_max: bool):
+    """(W, size) stacked windows -> (W,) per-window min or max."""
+    return jnp.max(windows, axis=1) if is_max else jnp.min(windows, axis=1)
+
+
+def _minmax_kernel(vals_ref, out_ref, *, size: int, is_max: bool):
+    block = vals_ref[...]                     # (BW, size) in VMEM
+    acc = block[:, 0]
+
+    def step(i, acc):
+        v = jax.lax.dynamic_slice_in_dim(block, i, 1, axis=1)[:, 0]
+        return jnp.maximum(acc, v) if is_max else jnp.minimum(acc, v)
+
+    out_ref[...] = jax.lax.fori_loop(1, size, step, acc)
+
+
+@functools.partial(jax.jit if AVAILABLE else lambda f, **k: f,
+                   static_argnames=("is_max", "interpret"))
+def window_minmax(windows, is_max: bool, interpret: bool = True):
+    """Pallas per-window min/max scan; pad W to the block multiple and
+    slice the result — padded rows reduce over real dtype values and
+    are discarded."""
+    w, size = windows.shape
+    bw = _WINDOW_BLOCK
+    wpad = -(-w // bw) * bw
+    padded = jnp.zeros((wpad, size), windows.dtype).at[:w].set(windows)
+    out = pl.pallas_call(
+        functools.partial(_minmax_kernel, size=size, is_max=is_max),
+        grid=(wpad // bw,),
+        in_specs=[pl.BlockSpec((bw, size), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bw,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((wpad,), windows.dtype),
+        interpret=interpret,
+    )(padded)
+    return out[:w]
+
+
+# -- banded join bound search -----------------------------------------------
+def join_bounds_ref(lt, rs, tol):
+    """searchsorted bounds of ``[lt - tol, lt + tol]`` in sorted rs."""
+    lo = jnp.searchsorted(rs, lt - tol, side="left")
+    hi = jnp.searchsorted(rs, lt + tol, side="right")
+    return lo, hi
+
+
+def _bounds_kernel(lt_ref, rs_ref, tol_ref, lo_ref, hi_ref,
+                   *, steps: int):
+    lt = lt_ref[...]                          # (BL,) left block
+    rs = rs_ref[...]                          # (R,) full sorted right
+    tol = tol_ref[0]
+    n = rs.shape[0]
+
+    def bisect(target, right_side):
+        # branchless searchsorted: ties go right iff right_side
+        lo = jnp.zeros(target.shape, jnp.int32)
+        hi = jnp.full(target.shape, n, jnp.int32)
+
+        def step(_, carry):
+            lo, hi = carry
+            mid = (lo + hi) // 2
+            v = rs[jnp.minimum(mid, n - 1)]
+            go = jnp.where(right_side, v <= target, v < target)
+            go = jnp.logical_and(go, mid < hi)  # guard empty ranges
+            return (jnp.where(go, mid + 1, lo), jnp.where(go, hi, mid))
+
+        lo, hi = jax.lax.fori_loop(0, steps, step, (lo, hi))
+        return lo
+
+    lo_ref[...] = bisect(lt - tol, False)
+    hi_ref[...] = bisect(lt + tol, True)
+
+
+@functools.partial(jax.jit if AVAILABLE else lambda f, **k: f,
+                   static_argnames=("interpret",))
+def join_bounds(lt, rs, tol, interpret: bool = True):
+    """Pallas bound search: (lo, hi) int32 per left timestamp.  Left
+    rows pad to the block multiple (pad searches are discarded); the
+    sorted right side is one VMEM-resident block per grid step, the
+    flash-attention-style narrowed operand."""
+    nl = lt.shape[0]
+    bl = 128
+    lpad = -(-nl // bl) * bl
+    lt_p = jnp.zeros((lpad,), lt.dtype).at[:nl].set(lt)
+    tol_arr = jnp.asarray([tol], lt.dtype)
+    steps = _steps(max(int(rs.shape[0]), 2)) + 1
+    lo, hi = pl.pallas_call(
+        functools.partial(_bounds_kernel, steps=steps),
+        grid=(lpad // bl,),
+        in_specs=[pl.BlockSpec((bl,), lambda i: (i,)),
+                  pl.BlockSpec(rs.shape, lambda i: (0,)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((bl,), lambda i: (i,)),
+                   pl.BlockSpec((bl,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((lpad,), jnp.int32),
+                   jax.ShapeDtypeStruct((lpad,), jnp.int32)],
+        interpret=interpret,
+    )(lt_p, rs, tol_arr)
+    return lo[:nl], hi[:nl]

@@ -238,7 +238,16 @@ def _colocated_bands(engine: Engine, left_expr: str,
 
 
 def execute_stream(engine: Engine, query: str):
-    """Evaluate one streaming-island expression against ``engine``."""
+    """Evaluate one streaming-island expression against ``engine``.
+
+    Under ``REPRO_QUERY_BACKEND=jit`` the compiled path (stream/compile)
+    gets first refusal: family ops execute as cached jitted plans over
+    exported ring arrays, bit-identical to the interpreter below; every
+    other op — and any fallback — continues here unchanged."""
+    from repro.stream import compile as query_compile
+    handled, value = query_compile.maybe_execute(engine, query)
+    if handled:
+        return value
     q = query.strip()
     m = re.match(r"^(\w+)\s*\(", q)
     if not m:

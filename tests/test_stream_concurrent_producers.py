@@ -391,3 +391,66 @@ def test_readers_see_consistent_cuts_under_concurrent_eviction():
     assert sh.total_appended == total
     assert sh.total_dropped + sh.num_rows == total
     sh.close()
+
+
+def test_hard_killed_producer_cannot_stall_a_shard_lane():
+    """PR-5 carry-over regression: a producer that reserves a seq block
+    (taking commit tickets on its shard lanes) and then dies without
+    ever staging must not wedge the ordered committer.  After one full
+    stall interval with zero lane progress the committer *steals* the
+    dead tickets, the frontier reaps the abandoned block as a permanent
+    hole (staging-failure semantics), a live producer sails through,
+    and a revived zombie commit raises instead of double-advancing."""
+    import time
+
+    bd = default_deployment()
+    s = bd.register_stream("streamstore0", "kill.s", ("v",),
+                           capacity=4096, shards=2, num_engines=2,
+                           block_rows=4)
+    s.append({"v": np.arange(16.0)})          # healthy first batch
+
+    # simulate the hard kill: reserve seqs + tickets, never stage/commit
+    with s._reserve_lock:
+        t = s.reserved
+        n = 8
+        s.reserved += n
+        touched = s._touched_shards(t, n)
+        tickets = {i: s._committers[i].issue() for i in touched}
+        s.blocks_reserved += 1
+        s.rows_reserved += n
+    with s._frontier:
+        s._pending_blocks[t] = (n, dict(tickets))
+    for c in s._committers:
+        c.stall_timeout = 0.2                 # keep the test fast
+
+    done = {}
+
+    def live():
+        t0 = time.monotonic()
+        s.append({"v": np.arange(100.0, 124.0)})
+        done["dt"] = time.monotonic() - t0
+
+    th = threading.Thread(target=live)
+    th.start()
+    th.join(timeout=30.0)
+    assert not th.is_alive(), "live producer stalled behind dead block"
+    # bounded by a couple of stall intervals, not forever
+    assert done["dt"] < 10.0, done
+
+    ic = s.ingest_concurrency()
+    assert ic["commit_steals"] > 0, ic
+    assert ic["blocks_abandoned"] == 1, ic
+    snap = s.snapshot()
+    seqs = np.asarray(snap.columns["seq"])
+    assert s.total_appended == 16 + 8 + 24    # hole still counted
+    assert seqs[-1] == s.total_appended - 1   # live batch visible
+    assert (np.diff(seqs) > 0).all()
+    # the hole is exactly the dead block: those seqs never materialize
+    assert not np.isin(np.arange(16, 24), seqs).any()
+
+    # a revived zombie must get an error, not a double lane-advance
+    from repro.stream.engine import StreamException
+    with pytest.raises(StreamException, match="stolen after"):
+        s._committers[touched[0]].commit(tickets[touched[0]],
+                                         lambda: None)
+    s.close()

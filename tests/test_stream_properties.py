@@ -204,3 +204,96 @@ def test_sharded_drop_accounting_under_eviction(ops, capacity, shards):
         assert (np.diff(seqs) > 0).all()
         assert seqs[-1] <= sharded.total_appended - 1
     sharded.close()
+
+
+# -- compiled-backend bit-identity (jit ≡ interpreted) ------------------------
+# full-precision float64 payloads: the compiled path stores the ring as
+# f64, computes under a scoped x64, and casts outputs to the ambient
+# default dtype — any round-trip loss or reassociation shows up here as
+# a bitwise mismatch
+_PRECISE = st.lists(
+    st.floats(min_value=-1e9, max_value=1e9,
+              allow_nan=False, allow_infinity=False),
+    min_size=1, max_size=60)
+
+
+def _run_backend(bd, query, backend):
+    """One query under one backend -> ("ok", value) | ("err", str)."""
+    from repro.stream import compile as qc
+    import os
+    prev = os.environ.get(qc.BACKEND_ENV)
+    os.environ[qc.BACKEND_ENV] = backend
+    try:
+        return "ok", bd.query(f"bdstream({query})").value
+    except Exception as exc:                  # noqa: BLE001 — compared
+        return "err", str(exc)
+    finally:
+        if prev is None:
+            os.environ.pop(qc.BACKEND_ENV, None)
+        else:
+            os.environ[qc.BACKEND_ENV] = prev
+
+
+def _assert_backend_parity(bd, query):
+    """jit must be *bit-identical* to interpreted: same values, dtypes,
+    column order — or the exact same error string."""
+    ref_kind, ref = _run_backend(bd, query, "interpreter")
+    got_kind, got = _run_backend(bd, query, "jit")
+    assert ref_kind == got_kind, (query, ref, got)
+    if ref_kind == "err":
+        assert ref == got, query
+        return
+    r_cols = dict(getattr(ref, "columns", None) or ref.attrs)
+    g_cols = dict(getattr(got, "columns", None) or got.attrs)
+    assert list(r_cols) == list(g_cols), query
+    for k in r_cols:
+        rv, gv = np.asarray(r_cols[k]), np.asarray(g_cols[k])
+        assert rv.dtype == gv.dtype, (query, k)
+        np.testing.assert_array_equal(rv, gv, err_msg=f"{query} [{k}]")
+
+
+@pytest.mark.parametrize("query", [
+    "window(pb.s, 8)",
+    "window(pb.s, 8, 3)",
+    "aggregate(window(pb.s, 8), sum(v))",
+    "aggregate(window(pb.s, 8), avg(v))",
+    "aggregate(window(pb.s, 8), max(v))",
+    "aggregate(window(pb.s, 8, 3), min(v))",
+])
+@given(vals=_PRECISE)
+@_SETTINGS
+def test_jit_backend_bit_identical_on_windows(query, vals):
+    """hypothesis drives the payloads; every compiled window/aggregate
+    shape must match the interpreter bit-for-bit (including the
+    not-enough-rows error strings)."""
+    pytest.importorskip("jax")
+    bd = default_deployment()
+    s = bd.register_stream("streamstore0", "pb.s", ("v",), capacity=128)
+    s.append({"v": np.asarray(vals, np.float64)})
+    _assert_backend_parity(bd, query)
+
+
+@given(ts=st.lists(st.floats(min_value=0.0, max_value=100.0,
+                             allow_nan=False, allow_infinity=False),
+                   min_size=2, max_size=50),
+       tol=st.floats(min_value=0.01, max_value=5.0, allow_nan=False))
+@_SETTINGS
+def test_jit_join_bit_identical_under_random_event_times(ts, tol):
+    """The compiled banded interval join against the interpreter, over
+    arbitrary (tied, duplicated, clustered) event times — match pairs,
+    ordering and the dt column must agree exactly."""
+    pytest.importorskip("jax")
+    bd = default_deployment()
+    a = bd.register_stream("streamstore0", "pb.a", ("ts", "x"),
+                           capacity=256, ts_field="ts", max_delay=0.0)
+    b = bd.register_stream("streamstore0", "pb.b", ("ts", "y"),
+                           capacity=256, ts_field="ts", max_delay=0.0)
+    arr = np.asarray(ts, np.float64)
+    a.append({"ts": arr, "x": np.arange(arr.size, dtype=np.float64)})
+    b.append({"ts": arr + 0.125, "y": -np.arange(arr.size,
+                                                 dtype=np.float64)})
+    a.flush()
+    b.flush()
+    q = (f"join(ewindow(pb.a, 25, 10), ewindow(pb.b, 25, 10),"
+         f" on=ts, tol={tol!r})")
+    _assert_backend_parity(bd, q)

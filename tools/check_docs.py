@@ -92,26 +92,19 @@ def statements(block: str) -> List[str]:
     return stmts
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--docs", default="docs/BQL.md")
-    args = ap.parse_args()
-    with open(args.docs) as fh:
-        text = fh.read()
-    blocks = extract_blocks(text)
-    runnable = [(lang, ln, body) for lang, ln, body in blocks
-                if lang in ("bql", "python")]
-    if not runnable:
-        print(f"FAIL: no runnable bql/python blocks in {args.docs}")
-        return 1
+def run_pass(docs: str, runnable, backend: str):
+    """Execute every runnable block against a fresh fixture under one
+    query backend; returns (examples run, failures)."""
+    import os
 
+    os.environ["REPRO_QUERY_BACKEND"] = backend
     bd = build_fixture()
     namespace = {"bd": bd, "np": np}
     ran, failures = 0, []
     for lang, line_no, body in runnable:
         if lang == "python":
             try:
-                exec(compile(body, f"{args.docs}:{line_no}", "exec"),
+                exec(compile(body, f"{docs}:{line_no}", "exec"),
                      namespace)
                 ran += 1
             except Exception:                          # noqa: BLE001
@@ -125,13 +118,44 @@ def main() -> int:
                 ran += 1
             except Exception:                          # noqa: BLE001
                 failures.append((line_no, flat, traceback.format_exc()))
+    return ran, failures
 
-    for line_no, snippet, tb in failures:
-        print(f"\nFAIL {args.docs}:{line_no}\n  {snippet}\n{tb}")
-    status = "FAIL" if failures else "OK"
-    print(f"{status}: {ran} documented examples executed, "
-          f"{len(failures)} failed ({args.docs})")
-    return 1 if failures else 0
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", default="docs/BQL.md")
+    args = ap.parse_args()
+    with open(args.docs) as fh:
+        text = fh.read()
+    blocks = extract_blocks(text)
+    runnable = [(lang, ln, body) for lang, ln, body in blocks
+                if lang in ("bql", "python")]
+    if not runnable:
+        print(f"FAIL: no runnable bql/python blocks in {args.docs}")
+        return 1
+
+    # every documented example must run under BOTH query backends: the
+    # docs describe one language, and the compiled path promises the
+    # interpreter's results — a doc example that only works interpreted
+    # is a parity bug, not a doc bug
+    from repro.stream import compile as query_compile
+    backends = ["interpreter"]
+    if query_compile.JAX_AVAILABLE:
+        backends.append("jit")
+    else:
+        print("note: jax unavailable — jit pass skipped")
+
+    bad = 0
+    for backend in backends:
+        ran, failures = run_pass(args.docs, runnable, backend)
+        for line_no, snippet, tb in failures:
+            print(f"\nFAIL [{backend}] {args.docs}:{line_no}\n"
+                  f"  {snippet}\n{tb}")
+        status = "FAIL" if failures else "OK"
+        print(f"{status} [{backend}]: {ran} documented examples "
+              f"executed, {len(failures)} failed ({args.docs})")
+        bad += len(failures)
+    return 1 if bad else 0
 
 
 if __name__ == "__main__":

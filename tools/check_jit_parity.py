@@ -1,0 +1,120 @@
+"""jit-parity gate: execute the full compiled op family under BOTH
+query backends in one process and require **bitwise** equality — values,
+dtypes, column order — plus a clean fallback ledger (the compiled path
+must have actually served every family query, not quietly handed it
+back to the interpreter).
+
+  PYTHONPATH=src python tools/check_jit_parity.py
+
+Run by CI's jit-parity job after the twice-run pytest suites: the
+suites prove each backend is self-consistent, this gate pins the two
+backends to each other.  Exits 0 only when every query pair matches
+and ``stats()["fallbacks"] == 0``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+
+def build():
+    from repro.core.api import default_deployment
+
+    bd = default_deployment()
+    rng = np.random.default_rng(2026)
+    p = bd.register_stream("streamstore0", "g.p", ("v", "w"),
+                           capacity=512)
+    s = bd.register_stream("streamstore0", "g.s", ("ts", "x"),
+                           capacity=512, ts_field="ts", max_delay=0.0)
+    a = bd.register_stream("streamstore0", "g.a", ("ts", "x"),
+                           capacity=512, ts_field="ts", max_delay=0.0,
+                           shards=2, num_engines=2)
+    b = bd.register_stream("streamstore0", "g.b", ("ts", "y"),
+                           capacity=512, ts_field="ts", max_delay=0.0,
+                           shards=2, num_engines=2)
+    n = 256
+    p.append({"v": rng.normal(size=n), "w": rng.normal(size=n)})
+    ts = np.sort(rng.uniform(0, 100, size=n))
+    s.append({"ts": ts, "x": rng.normal(size=n)})
+    s.flush()
+    a.append({"ts": ts, "x": rng.normal(size=n)})
+    b.append({"ts": ts + rng.uniform(-0.3, 0.3, size=n),
+              "y": rng.normal(size=n)})
+    a.flush()
+    b.flush()
+    return bd
+
+
+QUERIES = [
+    "bdstream(window(g.p, 64))",
+    "bdstream(window(g.p, 64, 16))",
+    "bdstream(ewindow(g.s, 20, 10))",
+    "bdstream(aggregate(window(g.p, 32), count(*)))",
+    "bdstream(aggregate(window(g.p, 32), sum(v)))",
+    "bdstream(aggregate(window(g.p, 32), avg(v)))",
+    "bdstream(aggregate(window(g.p, 32), min(w)))",
+    "bdstream(aggregate(window(g.p, 32), max(w)))",
+    "bdstream(aggregate(window(g.p, 64, 16), max(v)))",
+    "bdstream(aggregate(ewindow(g.s, 20, 10), sum(x)))",
+    "bdstream(join(ewindow(g.s, 40, 20), ewindow(g.s, 40, 20),"
+    " on=ts, tol=0.5))",
+    "bdstream(join(ewindow(g.a, 40, 20), ewindow(g.b, 40, 20),"
+    " on=ts, tol=0.25))",
+]
+
+
+def columns(value):
+    return dict(getattr(value, "columns", None) or value.attrs)
+
+
+def main() -> int:
+    from repro.stream import compile as query_compile
+
+    if not query_compile.JAX_AVAILABLE:
+        print("FAIL: jax unavailable — the jit-parity gate needs the "
+              "compiled path importable")
+        return 1
+    bd = build()
+    bad = 0
+    for query in QUERIES:
+        os.environ[query_compile.BACKEND_ENV] = "interpreter"
+        ref = bd.query(query).value
+        query_compile.reset_stats()
+        os.environ[query_compile.BACKEND_ENV] = "jit"
+        got = bd.query(query).value
+        stats = query_compile.stats()
+        errs = []
+        if stats["fallbacks"]:
+            errs.append(f"fallbacks={stats['fallbacks']} "
+                        f"({stats['fallback_reasons']})")
+        if not stats["executions"]:
+            errs.append("compiled path did not serve the query")
+        r_cols, g_cols = columns(ref), columns(got)
+        if list(r_cols) != list(g_cols):
+            errs.append(f"column order {list(r_cols)} != {list(g_cols)}")
+        else:
+            for k in r_cols:
+                rv = np.asarray(r_cols[k])
+                gv = np.asarray(g_cols[k])
+                if rv.dtype != gv.dtype:
+                    errs.append(f"[{k}] dtype {rv.dtype} != {gv.dtype}")
+                elif rv.shape != gv.shape:
+                    errs.append(f"[{k}] shape {rv.shape} != {gv.shape}")
+                elif not np.array_equal(rv, gv):
+                    errs.append(f"[{k}] values diverge")
+        if errs:
+            bad += 1
+            print(f"DIVERGED {query}")
+            for e in errs:
+                print(f"  - {e}")
+        else:
+            print(f"ok {query}")
+    print(("FAIL" if bad else "OK") + f": {len(QUERIES) - bad}/"
+          f"{len(QUERIES)} queries bit-identical across backends")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
