@@ -193,6 +193,12 @@ def main() -> None:
                     {"suite": name, "traceback": traceback.format_exc()})
                 traceback.print_exc()
 
+    # the unified metrics registry accumulated over every suite rides
+    # along (one scrape per bench run), so a BENCH_*.json also carries
+    # the observability view of what the benchmarks actually did
+    from repro.obs import metrics as obs_metrics
+    report["meta"]["obs"] = obs_metrics.snapshot()
+
     comparison = None
     if args.compare:
         with open(args.compare) as fh:

@@ -361,10 +361,84 @@ def run(batch_rows: int = 512, num_batches: int = 16,
     # plan is one cached jitted gather.  jit_join is the banded
     # interval join over the co-located 2-shard event-time pair.
     rows.extend(_jit_ratio_rows(rng, ticks_per_window))
+
+    # -- tracing overhead RATIO row ------------------------------------------
+    # tick rate with REPRO_TRACE off vs on, interleaved passes: keeps
+    # the disabled span machinery honest (the default-off path must stay
+    # near-free — the ratio slides toward 1.0 if it grows overhead, and
+    # the committed baseline's ratio gate catches that drift)
+    rows.append(_trace_overhead_row(rng, ticks_per_window))
     return rows
 
 
 JIT_PASSES = 5
+
+
+TRACE_PASSES = 5
+
+
+def _trace_overhead_row(rng, reps: int) -> Tuple:
+    """``stream/trace_overhead``: tick_rate(tracing off) /
+    tick_rate(on) for the windowed standing query.  Bigger is better:
+    the value is how much faster the default REPRO_TRACE=off path runs
+    than full span recording.  It sits above 1 while the disabled path
+    is near-free; if disabled-mode instrumentation ever grows real
+    overhead the ratio slides toward 1.0 (the committed baseline's
+    ratio gate catches the drift) and below 0.85 — disabled clearly
+    slower than enabled, which can only be a bug — the bench fails
+    outright.
+
+    Noise design: each pass measures BOTH sides back to back (order
+    alternating between passes) and contributes one *paired* per-pass
+    ratio; the row reports the median of those ratios.  Pairing inside
+    a pass cancels machine-wide drift that an unpaired best-of-N
+    cannot — on a 2-vCPU container with CPU steal, unpaired sides can
+    invert by ~10% on pure noise."""
+    from repro.obs import trace
+
+    bd = default_deployment()
+    s = bd.register_stream("streamstore0", "bench.trace", ("signal",),
+                           capacity=8192)
+    bd.register_continuous(
+        "bdstream(aggregate(window(bench.trace, 256), avg(signal)))",
+        every_n_ticks=1, name="trace_cq")
+    batch = rng.standard_normal(256)
+    s.append({"signal": batch})
+    bd.streams.tick()                         # warm the plan cache
+
+    def _side(on: bool) -> float:
+        trace.set_enabled(on)
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            s.append({"signal": batch})
+            bd.streams.tick()
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    ratios, med = [], {False: [], True: []}
+    prev = trace.enabled()
+    try:
+        for i in range(TRACE_PASSES):
+            order = (False, True) if i % 2 == 0 else (True, False)
+            pass_t = {}
+            for on in order:
+                pass_t[on] = _side(on)
+            ratios.append(pass_t[True] / pass_t[False])
+            for on, t in pass_t.items():
+                med[on].append(t)
+    finally:
+        trace.set_enabled(prev)
+        trace.reset()
+    ratio = float(np.median(ratios))          # rate(off) / rate(on)
+    off_us = float(np.median(med[False])) * 1e6
+    on_us = float(np.median(med[True])) * 1e6
+    assert ratio >= 0.85, (
+        f"REPRO_TRACE=off ticks slower than tracing enabled: ratio "
+        f"{ratio:.3f} (off={off_us:.1f}us on={on_us:.1f}us)")
+    LAST_META["trace_overhead_ratio"] = round(ratio, 3)
+    return ("stream/trace_overhead", ratio,
+            f"off_us={off_us:.1f}_on_us={on_us:.1f}_w=256", "ratio")
 
 
 def _jit_backend_ratio(bd, query: str, reps: int) -> Tuple[float, float,

@@ -19,7 +19,14 @@ from repro.core import datamodel as dm
 
 
 def status(bd: BigDawg) -> Dict[str, Any]:
-    """Deployment status: engines, islands, objects, monitor health."""
+    """Deployment status: engines, islands, objects, monitor health.
+
+    Monitor-sourced sections all render one ``Monitor.snapshot()`` —
+    a deep copy taken under the Monitor lock — because the background
+    MonitoringTask / StreamRuntime tick mutate the live dicts
+    concurrently (iterating ``monitor.engine_ewma`` etc. directly from
+    this thread raced and could die mid-resize).  The same series are
+    exported through ``repro.obs.metrics`` (``admin metrics``)."""
     out: Dict[str, Any] = {"engines": {}, "islands": {}, "monitor": {}}
     for name, engine in bd.engines.items():
         objs = engine.list_objects()
@@ -35,10 +42,11 @@ def status(bd: BigDawg) -> Dict[str, Any]:
     for isl in bd.catalog.islands.values():
         out["islands"][isl.name] = [
             e.name for e in bd.catalog.engines_for_island(isl.name)]
+    snap = bd.monitor.snapshot()
     out["monitor"] = {
         "engine_ewma_ms": {k: round(v * 1e3, 3)
-                           for k, v in bd.monitor.engine_ewma.items()},
-        "stragglers": bd.monitor.stragglers(),
+                           for k, v in snap["engine_ewma"].items()},
+        "stragglers": snap["stragglers"],
         "monitoring_task_running": bd.monitoring_task is not None,
     }
     cfg = bd.planner_config
@@ -53,20 +61,18 @@ def status(bd: BigDawg) -> Dict[str, Any]:
     # streaming island: per-stream ring-buffer health + standing queries
     out["streams"] = bd.streams.status()
     out["streams"]["monitor_ewma_ms"] = {
-        k: round(v * 1e3, 3) for k, v in bd.monitor.stream_ewma.items()}
+        k: round(v * 1e3, 3) for k, v in snap["stream_ewma"].items()}
     # event-time health: per-stream low watermark + late/pending rows
     # (the Monitor's copy, fed every tick — matches each stream's stats)
-    out["streams"]["watermarks"] = {
-        k: dict(v) for k, v in bd.monitor.stream_watermarks.items()}
+    out["streams"]["watermarks"] = snap["stream_watermarks"]
     # multi-producer ingest health: per-stream producer counts, seq
     # blocks reserved, in-flight rows and ordered-commit contention
     # (the Monitor's per-tick copy of stream.ingest_concurrency())
-    out["streams"]["ingest_concurrency"] = {
-        k: dict(v) for k, v in bd.monitor.ingest_stats.items()}
+    out["streams"]["ingest_concurrency"] = snap["ingest_stats"]
     # compiled query path: active backend plus plan-compile/cache-hit/
     # fallback counters (the Monitor's per-tick copy of
     # repro.stream.compile.stats(); fallbacks stay 0 on a healthy lane)
-    out["streams"]["query_backend"] = dict(bd.monitor.jit_stats)
+    out["streams"]["query_backend"] = snap["jit_stats"]
     out["plan_cache"] = dict(bd.planner.plan_cache.stats(),
                              capacity=cfg.cache_size,
                              max_age_seconds=cfg.cache_max_age_seconds)
@@ -108,6 +114,21 @@ def stop(bd: BigDawg) -> None:
         bd.monitoring_task = None
 
 
+def _demo_streams(bd: BigDawg, ticks: int) -> None:
+    """The ``streams`` demo feed (shared by the trace/metrics
+    commands): a standing cross-island window-average query over the
+    synthetic MIMIC waveform stream, one execution per batch."""
+    from repro.data.mimic import stream_mimic_waveforms
+    bd.register_continuous(
+        "bdarray(aggregate(bdcast(bdstream(window("
+        "mimic2v26.waveform_stream, 64)), w_arr,"
+        " '<signal:double>[tick=0:63,64,0]', array), avg(signal)))",
+        every_n_ticks=1, name="wave_avg")
+    for _ in stream_mimic_waveforms(bd, batch_rows=64,
+                                    num_batches=ticks):
+        pass
+
+
 def main() -> None:
     from repro.core.executor import ExecutorConfig
     from repro.core.planner import PlannerConfig
@@ -115,9 +136,13 @@ def main() -> None:
     ap = argparse.ArgumentParser(description="BigDAWG admin interface")
     ap.add_argument("command",
                     choices=("status", "demo-status", "streams",
-                             "rebalance", "joins"))
+                             "rebalance", "joins", "trace", "metrics"))
     ap.add_argument("--ticks", type=int, default=8,
-                    help="feed batches for the streams/rebalance commands")
+                    help="feed batches for the streams/rebalance/trace/"
+                         "metrics commands")
+    ap.add_argument("--out", type=str, default="trace.json",
+                    help="Chrome trace-event JSON output path for the "
+                         "trace command (load in Perfetto)")
     ap.add_argument("--shards", type=int, default=4,
                     help="shard count for the rebalance demo stream")
     ap.add_argument("--stream-engines", type=int, default=2,
@@ -132,6 +157,12 @@ def main() -> None:
     ap.add_argument("--plan-cache-size", type=int, default=128,
                     help="signature-keyed plan cache LRU capacity")
     args = ap.parse_args()
+    if args.command == "trace":
+        # the trace demo runs the jit query backend by default (unless
+        # the caller pinned one) so the export carries compile-layer
+        # spans alongside planner/executor, stream tick and committer
+        import os
+        os.environ.setdefault("REPRO_QUERY_BACKEND", "jit")
     if args.command == "rebalance" and args.shards < 2:
         ap.error("rebalance demo needs --shards >= 2 (a single ring "
                  "has nothing to move)")
@@ -206,18 +237,36 @@ def main() -> None:
     elif args.command == "streams":
         # live streaming island demo: feed the synthetic MIMIC waveform
         # stream, run a standing window-average query on every batch
-        from repro.data.mimic import stream_mimic_waveforms
-        bd.register_continuous(
-            "bdarray(aggregate(bdcast(bdstream(window("
-            "mimic2v26.waveform_stream, 64)), w_arr,"
-            " '<signal:double>[tick=0:63,64,0]', array), avg(signal)))",
-            every_n_ticks=1, name="wave_avg")
-        for _ in stream_mimic_waveforms(bd, batch_rows=64,
-                                        num_batches=args.ticks):
-            pass
+        _demo_streams(bd, args.ticks)
         st = status(bd)
         print(json.dumps({"streams": st["streams"],
                           "plan_cache": st["plan_cache"]}, indent=1))
+        return
+    elif args.command == "trace":
+        # run the streams demo with tracing on and export the span ring:
+        # Chrome trace-event JSON (Perfetto-loadable) + text flamegraph
+        from repro.obs import trace
+        trace.set_enabled(True)
+        trace.reset()
+        _demo_streams(bd, args.ticks)
+        recorded = trace.spans()
+        n_events = trace.save_chrome_trace(args.out, recorded)
+        print(trace.flamegraph(recorded))
+        slow = trace.slow_ops()
+        print(json.dumps({
+            "out": args.out, "spans": n_events,
+            "layers": sorted({r.name.split("/", 1)[0]
+                              for r in recorded}),
+            "slow_ops": slow[-5:],
+            "slow_op_threshold_ms": trace.slow_op_threshold_ms(),
+        }, indent=1))
+        return
+    elif args.command == "metrics":
+        # run the streams demo, then dump the process-wide registry in
+        # Prometheus text exposition format (what /metrics serves)
+        from repro.obs import metrics
+        _demo_streams(bd, args.ticks)
+        print(metrics.prometheus_text(), end="")
         return
     print(json.dumps(status(bd), indent=1))
 

@@ -26,6 +26,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 from repro.core import bql
 from repro.core.engines import Engine
 from repro.core.migrator import MigrationParams, Migrator
+from repro.obs import trace
 
 
 class LocalQueryExecutionException(Exception):
@@ -229,16 +230,18 @@ class Executor:
             parent_nid = cast_parent[id(cast)]
             child_engine = self.engines[plan.node_engines[child_nid]]
             engine = self.engines[plan.node_engines[parent_nid]]
+            method = plan.cast_methods.get(cid, "binary")
             tmp = f"__tmp_{next(_TMP_IDS)}"
-            child_engine.put(tmp, values[child_nid])
-            try:
-                method = plan.cast_methods.get(cid, "binary")
-                result = self.migrator.migrate(
-                    child_engine, tmp, engine, dest_names[cid],
-                    MigrationParams(method=method,
-                                    dest_schema=cast.dest_schema))
-            finally:
-                child_engine.delete(tmp)
+            with trace.span("executor/cast", method=method,
+                            src=child_engine.name, dst=engine.name):
+                child_engine.put(tmp, values[child_nid])
+                try:
+                    result = self.migrator.migrate(
+                        child_engine, tmp, engine, dest_names[cid],
+                        MigrationParams(method=method,
+                                        dest_schema=cast.dest_schema))
+                finally:
+                    child_engine.delete(tmp)
             task_stages[("cast", cid)] = [
                 ("Migrator dispatch", result.dispatch_seconds),
                 (f"Migration ({method})", result.transfer_seconds)]
@@ -252,12 +255,14 @@ class Executor:
             query = _scoped_query(node.query, renames) if renames \
                 else node.query
             t0 = time.perf_counter()
-            try:
-                value = shims.execute(node.island, engine, query)
-            except Exception as exc:                     # noqa: BLE001
-                raise LocalQueryExecutionException(
-                    f"{node.island} query failed on {engine.name}: "
-                    f"{node.query!r}: {exc}") from exc
+            with trace.span("executor/node", island=node.island,
+                            engine=engine.name):
+                try:
+                    value = shims.execute(node.island, engine, query)
+                except Exception as exc:                 # noqa: BLE001
+                    raise LocalQueryExecutionException(
+                        f"{node.island} query failed on {engine.name}: "
+                        f"{node.query!r}: {exc}") from exc
             dt = time.perf_counter() - t0
             task_stages[("node", nid)] = [
                 (f"{node.island} query ({engine.name})", dt)]
@@ -282,22 +287,24 @@ class Executor:
         if len(deps) <= 1:
             mode = "serial"
         wall0 = time.perf_counter()
-        try:
-            if mode == "serial":
-                for task in self._topo_order(nodes, casts, node_ids,
-                                             cast_ids):
-                    run_task(task)
-            else:
-                self._run_concurrent(deps, run_task)
-        except BaseException:
-            # an aborted/failed plan never reaches the parent-node cleanup
-            # that deletes materialized cast outputs — sweep them here so
-            # cancelled training plans don't leak scoped objects
-            for cid, cast in casts.items():
-                parent = self.engines[
-                    plan.node_engines[cast_parent[id(cast)]]]
-                parent.delete(dest_names[cid])
-            raise
+        with trace.span("executor/plan", mode=mode, tasks=len(deps)):
+            try:
+                if mode == "serial":
+                    for task in self._topo_order(nodes, casts, node_ids,
+                                                 cast_ids):
+                        run_task(task)
+                else:
+                    self._run_concurrent(deps, run_task)
+            except BaseException:
+                # an aborted/failed plan never reaches the parent-node
+                # cleanup that deletes materialized cast outputs — sweep
+                # them here so cancelled training plans don't leak
+                # scoped objects
+                for cid, cast in casts.items():
+                    parent = self.engines[
+                        plan.node_engines[cast_parent[id(cast)]]]
+                    parent.delete(dest_names[cid])
+                raise
         wall = time.perf_counter() - wall0
 
         # canonical stage order (identical to serial execution order), so
@@ -342,6 +349,9 @@ class Executor:
                 dependents.setdefault(d, []).append(t)
         first_exc: Optional[BaseException] = None
         workers = max(1, self.config.max_workers)
+        # worker threads inherit the scheduling thread's active span, so
+        # node/cast spans parent-link across the pool hop
+        run_task = trace.bind(run_task)
         with ThreadPoolExecutor(max_workers=workers) as pool:
             futures: Dict[Future, Tuple[str, int]] = {}
             for t in sorted(remaining):
@@ -367,5 +377,5 @@ class Executor:
 
     def execute_plan_async(self, plan: QueryExecutionPlan
                            ) -> "Future[QueryResult]":
-        return self._pool.submit(self.execute_plan, plan,
+        return self._pool.submit(trace.bind(self.execute_plan), plan,
                                  scope=f"async{next(_ASYNC_SCOPE_IDS)}")

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import datamodel as dm
 from repro.core.engines import Engine
+from repro.obs import metrics, trace
 
 
 class MigrationException(Exception):
@@ -78,36 +79,41 @@ class Migrator:
                 engine_to: Engine, object_to: str,
                 params: Optional[MigrationParams] = None) -> MigrationResult:
         params = params or MigrationParams()
-        t0 = time.perf_counter()
-        if not engine_from.has(object_from):
-            raise MigrationException(
-                f"{engine_from.name} has no object {object_from!r}")
-        method = params.method or self._negotiate(engine_from, engine_to)
-        t1 = time.perf_counter()
+        with trace.span("migrator/route", src=engine_from.name,
+                        dst=engine_to.name) as sp:
+            t0 = time.perf_counter()
+            if not engine_from.has(object_from):
+                raise MigrationException(
+                    f"{engine_from.name} has no object {object_from!r}")
+            method = params.method or self._negotiate(engine_from,
+                                                      engine_to)
+            sp.set(method=method)
+            t1 = time.perf_counter()
 
-        obj = engine_from.get(object_from)
-        nbytes = dm.object_nbytes(obj)
-        rows = getattr(obj, "num_rows", 0) or (
-            int(np.prod(obj.shape)) if isinstance(obj, dm.ArrayObject) else 0)
+            obj = engine_from.get(object_from)
+            nbytes = dm.object_nbytes(obj)
+            rows = getattr(obj, "num_rows", 0) or (
+                int(np.prod(obj.shape))
+                if isinstance(obj, dm.ArrayObject) else 0)
 
-        if method == "binary":
-            payload, schema = engine_from.export_binary(object_from)
-            schema["dest_schema"] = params.dest_schema
-            coerced = engine_to.coerce(payload, schema)
-            engine_to.import_binary(object_to, coerced, schema)
-        elif method == "staged":
-            payload, schema = engine_from.export_staged(object_from)
-            schema["dest_schema"] = params.dest_schema
-            engine_to.import_staged(object_to, payload, schema)
-        elif method == "quant":
-            self._quant_migrate(engine_from, object_from, engine_to,
-                                object_to, params)
-        elif method == "stream":
-            self._stream_migrate(engine_from, object_from, engine_to,
-                                 object_to)
-        else:
-            raise MigrationException(f"unknown cast method {method!r}")
-        t2 = time.perf_counter()
+            if method == "binary":
+                payload, schema = engine_from.export_binary(object_from)
+                schema["dest_schema"] = params.dest_schema
+                coerced = engine_to.coerce(payload, schema)
+                engine_to.import_binary(object_to, coerced, schema)
+            elif method == "staged":
+                payload, schema = engine_from.export_staged(object_from)
+                schema["dest_schema"] = params.dest_schema
+                engine_to.import_staged(object_to, payload, schema)
+            elif method == "quant":
+                self._quant_migrate(engine_from, object_from, engine_to,
+                                    object_to, params)
+            elif method == "stream":
+                self._stream_migrate(engine_from, object_from, engine_to,
+                                     object_to)
+            else:
+                raise MigrationException(f"unknown cast method {method!r}")
+            t2 = time.perf_counter()
 
         result = MigrationResult(
             object_from=object_from, object_to=object_to,
@@ -115,6 +121,15 @@ class Migrator:
             method=method, bytes_moved=nbytes, rows=int(rows),
             dispatch_seconds=t1 - t0, transfer_seconds=t2 - t1)
         self.log.append(result)
+        metrics.counter("repro_migrations_total",
+                        "Migrator routes executed",
+                        method=method).inc()
+        metrics.counter("repro_migration_bytes_total",
+                        "bytes moved between engines",
+                        method=method).inc(nbytes)
+        metrics.histogram("repro_migration_seconds",
+                          "dispatch + transfer time per migration",
+                          method=method).observe(result.seconds)
         engine_from.record(f"migrate_out:{method}", result.seconds)
         engine_to.record(f"migrate_in:{method}", result.seconds)
         return result

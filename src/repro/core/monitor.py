@@ -18,6 +18,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.signatures import Signature
+from repro.obs import metrics
 
 
 @dataclasses.dataclass
@@ -186,6 +187,16 @@ class Monitor:
                 + (1 - self.EWMA_ALPHA) * prev)
             self.engine_ops[engine_name] = \
                 self.engine_ops.get(engine_name, 0) + 1
+            ewma = self.engine_ewma[engine_name]
+        metrics.gauge("repro_engine_latency_ewma_seconds",
+                      "per-engine query latency EWMA",
+                      engine=engine_name).set(ewma)
+        metrics.counter("repro_engine_ops_total",
+                        "island sub-queries executed per engine",
+                        engine=engine_name).inc()
+        metrics.histogram("repro_engine_query_seconds",
+                          "island sub-query latency",
+                          engine=engine_name).observe(seconds)
 
     # -- continuous-query health (streaming island) ---------------------------
     def observe_stream(self, name: str, latency_seconds: float,
@@ -207,6 +218,17 @@ class Monitor:
             stats["dropped"] += int(dropped)
             stats["backpressure"] += int(bool(lagging))
             stats["late"] += int(late)
+            stats_now = dict(stats)
+        metrics.histogram("repro_stream_query_seconds",
+                          "standing-query tick latency",
+                          query=name).observe(latency_seconds)
+        for key, mname in (("ticks", "repro_stream_query_ticks_total"),
+                           ("dropped", "repro_stream_query_drops_total"),
+                           ("backpressure",
+                            "repro_stream_query_backpressure_total"),
+                           ("late", "repro_stream_query_late_total")):
+            metrics.counter(mname, f"standing-query cumulative {key}",
+                            query=name).set_total(stats_now[key])
 
     def observe_watermark(self, stream_name: str, watermark: float,
                           late: int = 0, pending: int = 0) -> None:
@@ -219,6 +241,16 @@ class Monitor:
                 "watermark": (None if watermark == float("-inf")
                               else float(watermark)),
                 "late": int(late), "pending": int(pending)}
+        if watermark != float("-inf"):
+            metrics.gauge("repro_stream_watermark",
+                          "event-time low watermark",
+                          stream=stream_name).set(float(watermark))
+        metrics.counter("repro_stream_late_rows_dropped_total",
+                        "rows arrived below the watermark (dropped)",
+                        stream=stream_name).set_total(int(late))
+        metrics.gauge("repro_stream_pending_rows",
+                      "insertion-buffer rows above the watermark",
+                      stream=stream_name).set(int(pending))
 
     def observe_ingest(self, stream_name: str,
                        stats: Dict[str, int]) -> None:
@@ -227,6 +259,22 @@ class Monitor:
         rows reserved, in-flight rows, ordered-commit waits)."""
         with self._lock:
             self.ingest_stats[stream_name] = dict(stats)
+        for key, kind in (("producers_open", "gauge"),
+                          ("in_flight_rows", "gauge"),
+                          ("blocks_reserved", "counter"),
+                          ("rows_reserved", "counter"),
+                          ("commit_waits", "counter"),
+                          ("commit_steals", "counter")):
+            if key not in stats:
+                continue
+            name = f"repro_stream_ingest_{key}" + (
+                "_total" if kind == "counter" else "")
+            if kind == "gauge":
+                metrics.gauge(name, f"multi-producer ingest {key}",
+                              stream=stream_name).set(stats[key])
+            else:
+                metrics.counter(name, f"multi-producer ingest {key}",
+                                stream=stream_name).set_total(stats[key])
 
     def observe_jit(self, stats: Dict[str, Any]) -> None:
         """Record the compiled standing-query path's counters (the
@@ -274,6 +322,20 @@ class Monitor:
                     float(st.get("dropped", 0)))
                 for i, st in snap.items()}
             self.shard_stats[stream_name] = snap
+            ewma_now = dict(ewma)
+        for i, st in snap.items():
+            metrics.counter("repro_stream_shard_appended_total",
+                            "rows appended per shard",
+                            stream=stream_name, shard=i
+                            ).set_total(float(st.get("appended", 0)))
+            metrics.counter("repro_stream_shard_dropped_total",
+                            "rows overwritten per shard",
+                            stream=stream_name, shard=i
+                            ).set_total(float(st.get("dropped", 0)))
+            metrics.gauge("repro_stream_shard_load_ewma",
+                          "per-tick shard ingest-load EWMA",
+                          stream=stream_name, shard=i
+                          ).set(ewma_now.get(i, 0.0))
 
     def shard_loads(self, stream_name: str) -> Dict[int, float]:
         """Current per-shard ingest loads: the per-tick EWMA when
@@ -324,18 +386,46 @@ class Monitor:
             return [e for e, v in self.engine_ewma.items()
                     if v > factor * median]
 
+    # -- consistent read view --------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """Deep-copied view of every health dict, taken under the
+        Monitor lock.  The one sanctioned way to *read* this state from
+        another thread: ``admin.status()`` renders it while the
+        background MonitoringTask / StreamRuntime tick keep mutating
+        the live dicts (iterating those directly races)."""
+        with self._lock:
+            return {
+                "engine_ewma": dict(self.engine_ewma),
+                "engine_ops": dict(self.engine_ops),
+                "stream_ewma": dict(self.stream_ewma),
+                "stream_stats": {k: dict(v)
+                                 for k, v in self.stream_stats.items()},
+                "stream_watermarks": {
+                    k: dict(v)
+                    for k, v in self.stream_watermarks.items()},
+                "ingest_stats": {k: dict(v)
+                                 for k, v in self.ingest_stats.items()},
+                "jit_stats": dict(self.jit_stats),
+                "shard_stats": {
+                    name: {i: dict(st) for i, st in shards.items()}
+                    for name, shards in self.shard_stats.items()},
+                "stragglers": self.stragglers(),
+            }
+
     # -- persistence -----------------------------------------------------------
     def to_json(self) -> str:
         with self._lock:
             payload = {
                 "benchmarks": {
-                    key: {qid: {"durations": rec.durations,
+                    key: {qid: {"durations": list(rec.durations),
                                 "cost_model": rec.cost_model_seconds}
                           for qid, rec in records.items()}
                     for key, (_, records) in self._benchmarks.items()},
-                "engine_ewma": self.engine_ewma,
+                "engine_ewma": dict(self.engine_ewma),
             }
-            return json.dumps(payload, indent=1)
+        # dumps outside the lock: the payload is a deep copy, so a
+        # concurrent observe_* can't mutate dicts mid-serialization
+        return json.dumps(payload, indent=1)
 
 
 class MonitoringTask:

@@ -37,6 +37,7 @@ from repro.core.executor import (DataUnavailableException, Executor,
 from repro.core.migrator import Migrator
 from repro.core.monitor import Monitor
 from repro.core.signatures import Signature
+from repro.obs import metrics, trace
 
 MAX_ENUMERATED_PLANS = 16
 CAST_METHODS = ("binary", "staged")
@@ -365,6 +366,10 @@ class Planner:
                     else:
                         self._cancel_streaks[streak_key] = streak
                         self.cost_model_cancels += 1
+                        metrics.counter(
+                            "repro_plan_cancels_total",
+                            "training-mode plans cancelled early",
+                            tier="cost_model").inc()
                 plans = keep
         budget = max(1, cfg.plan_parallelism)
         best_lock = threading.Lock()
@@ -388,6 +393,9 @@ class Planner:
                 res = self.executor.execute_plan(
                     plan, should_abort=should_abort, scope=scope)
             except PlanAbortedException:
+                metrics.counter("repro_plan_cancels_total",
+                                "training-mode plans cancelled early",
+                                tier="wall_clock").inc()
                 return None
             self.monitor.add_measurement(sig, plan.qep_id, res.seconds)
             with best_lock:
@@ -398,7 +406,9 @@ class Planner:
             outcomes = [run_one(p) for p in plans]
         else:
             with ThreadPoolExecutor(max_workers=budget) as pool:
-                outcomes = list(pool.map(run_one, plans))
+                # exploration workers inherit the planner span, so the
+                # per-QEP executor spans parent-link across the pool
+                outcomes = list(pool.map(trace.bind(run_one), plans))
         # cancellation requires a finite best_seconds, i.e. at least one
         # finished plan — so `finished` is never empty
         return [o for o in outcomes if o is not None]
@@ -406,6 +416,29 @@ class Planner:
     # -- entry point (paper's Planner.processQuery) ----------------------------
     def process_query(self, userinput: str,
                       is_training_mode: bool = False) -> Response:
+        mode = "training" if is_training_mode else "lean"
+        t_query = time.perf_counter()
+        with trace.span("planner/query", mode=mode) as sp:
+            response = self._process_query(userinput, is_training_mode)
+            sp.set(qep=response.qep_id,
+                   cache_hit=response.plan_cache_hit)
+        metrics.histogram("repro_query_seconds",
+                          "end-to-end process_query latency",
+                          mode=mode).observe(
+            time.perf_counter() - t_query)
+        metrics.counter("repro_queries_total",
+                        "queries processed", mode=mode).inc()
+        cache = self.plan_cache.stats()
+        metrics.gauge("repro_plan_cache_size",
+                      "signature-keyed plan cache entries"
+                      ).set(cache["size"])
+        for key in ("hits", "misses", "evictions", "stale_evictions"):
+            metrics.counter(f"repro_plan_cache_{key}_total",
+                            f"plan cache {key}").set_total(cache[key])
+        return response
+
+    def _process_query(self, userinput: str,
+                       is_training_mode: bool = False) -> Response:
         t0 = time.perf_counter()
         root = bql.parse(userinput)
         parse_s = time.perf_counter() - t0

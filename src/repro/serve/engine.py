@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.models import registry
 from repro.models.config import ModelConfig
+from repro.obs import metrics, trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,6 +31,10 @@ class ServeConfig:
     # waves in flight at once. Each wave owns its KV cache, so waves are
     # independent; >1 overlaps host-side scheduling with device compute.
     max_parallel_waves: int = 1
+    # observability: serve a Prometheus /metrics endpoint on this port
+    # (0 = don't; the registry is process-wide, so any port exposes
+    # every subsystem's series, not just serving)
+    metrics_port: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -64,6 +69,21 @@ class ServeSession:
                 p, batch, cache, pos, cfg, rules))
 
     def run_wave(self, requests: List[Request]) -> List[Completion]:
+        with trace.span("serve/wave", batch=len(requests)) as sp:
+            completions = self._run_wave(requests)
+            sp.set(prefill_s=round(completions[0].prefill_seconds, 6),
+                   decode_s=round(completions[0].decode_seconds, 6))
+        metrics.counter("repro_serve_waves_total",
+                        "decode waves executed").inc()
+        metrics.histogram("repro_serve_prefill_seconds",
+                          "batched prefill time per wave").observe(
+            completions[0].prefill_seconds)
+        metrics.histogram("repro_serve_decode_seconds",
+                          "lock-step decode time per wave").observe(
+            completions[0].decode_seconds)
+        return completions
+
+    def _run_wave(self, requests: List[Request]) -> List[Completion]:
         b = len(requests)
         plen = max(len(r.prompt) for r in requests)
         prompts = np.zeros((b, plen), np.int32)
@@ -119,6 +139,10 @@ class Scheduler:
         self.session = session
         self.queue: List[Request] = []
         self.completed: List[Completion] = []
+        self._metrics_server = None
+        port = session.scfg.metrics_port
+        if port is not None:
+            self._metrics_server = metrics.start_http_server(port)
 
     def submit(self, request: Request) -> None:
         self.queue.append(request)
@@ -129,12 +153,21 @@ class Scheduler:
             waves.append(self.queue[: self.session.scfg.max_batch])
             self.queue = self.queue[self.session.scfg.max_batch:]
         parallel = max(1, self.session.scfg.max_parallel_waves)
-        if parallel == 1 or len(waves) <= 1:
-            for wave in waves:
-                self.completed.extend(self.session.run_wave(wave))
-        else:
-            from concurrent.futures import ThreadPoolExecutor
-            with ThreadPoolExecutor(max_workers=parallel) as pool:
-                for done in pool.map(self.session.run_wave, waves):
-                    self.completed.extend(done)
+        with trace.span("serve/schedule", waves=len(waves),
+                        parallel=parallel):
+            if parallel == 1 or len(waves) <= 1:
+                for wave in waves:
+                    self.completed.extend(self.session.run_wave(wave))
+            else:
+                from concurrent.futures import ThreadPoolExecutor
+                run_wave = trace.bind(self.session.run_wave)
+                with ThreadPoolExecutor(max_workers=parallel) as pool:
+                    for done in pool.map(run_wave, waves):
+                        self.completed.extend(done)
         return self.completed
+
+    def close(self) -> None:
+        """Shut down the /metrics endpoint (no-op without one)."""
+        if self._metrics_server is not None:
+            self._metrics_server.shutdown()
+            self._metrics_server = None

@@ -75,6 +75,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import numpy as np
 
 from repro.core import datamodel as dm
+from repro.obs import metrics, trace
 from repro.stream import kernels
 from repro.stream.engine import (_COMBINABLE_AGGS, ShardedStream, Stream,
                                  StreamException, _latest_closed_ewindow)
@@ -133,12 +134,19 @@ def reset_stats() -> None:
 def _bump(key: str, n: int = 1) -> None:
     with _STATS_LOCK:
         _STATS[key] += n
+    metrics.counter("repro_compile_events_total",
+                    "compiled query path events (compiles, cache hits, "
+                    "executions, by-design interpreted)",
+                    event=key).inc(n)
 
 
 def _fallback(reason: str) -> None:
     with _STATS_LOCK:
         _STATS["fallbacks"] += 1
         _FALLBACK_REASONS[reason] = _FALLBACK_REASONS.get(reason, 0) + 1
+    metrics.counter("repro_compile_fallbacks_total",
+                    "compiled plans that fell back to the interpreter",
+                    reason=reason).inc()
 
 
 # -- explicit process-wide config switches (operator-facing; the per-tick
@@ -602,7 +610,12 @@ def _compile_join(engine, left_expr: str, right_expr: str,
                     dt = np.asarray(dt_dev)[:pairs]
         if bands_eff > 1:
             shim.JOIN_STATS["partial_joins"] += 1
+            metrics.counter("repro_stream_joins_total",
+                            "interval joins executed",
+                            kind="partial").inc()
         shim.JOIN_STATS["joins"] += 1
+        metrics.counter("repro_stream_joins_total",
+                        "interval joins executed", kind="full").inc()
         cols = {}
         for j, f in enumerate(la):
             cols[f"l_{f}"] = jnp.asarray(l_out[j])
@@ -706,18 +719,21 @@ def maybe_execute(engine, query: str) -> Tuple[bool, Any]:
         return False, None
     key = _normalize(query)
     try:
-        anchor = _plan_anchor(engine, query)
-        if anchor is None:
-            _bump("interpreted")
-            return False, None
-        cache = _plan_cache_for(anchor)
-        plan = cache.get(key)
-        if plan is None:
-            plan = _compile_expr(engine, query)
-            cache[key] = plan
-            _bump("compiles")
-        else:
-            _bump("cache_hits")
+        with trace.span("compile/plan") as sp:
+            anchor = _plan_anchor(engine, query)
+            if anchor is None:
+                _bump("interpreted")
+                return False, None
+            cache = _plan_cache_for(anchor)
+            plan = cache.get(key)
+            if plan is None:
+                plan = _compile_expr(engine, query)
+                cache[key] = plan
+                _bump("compiles")
+                sp.set(cache_hit=False, op=plan.kind)
+            else:
+                _bump("cache_hits")
+                sp.set(cache_hit=True, op=plan.kind)
     except Uncompilable:
         _bump("interpreted")
         return False, None
@@ -727,7 +743,8 @@ def maybe_execute(engine, query: str) -> Tuple[bool, Any]:
         _fallback(type(exc).__name__)
         return False, None
     try:
-        value = plan.execute()
+        with trace.span("compile/execute", op=plan.kind):
+            value = plan.execute()
     except Uncompilable as exc:
         # the plan compiled but this tick's *data* defeated it (e.g.
         # non-finite join keys): a real fallback, not a by-design skip

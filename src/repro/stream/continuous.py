@@ -24,6 +24,7 @@ import time
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import bql, signatures
+from repro.obs import metrics, trace
 
 _CQ_IDS = itertools.count()
 
@@ -231,6 +232,22 @@ class StreamRuntime:
                 self._tick_gap_seconds = now - self._last_tick_time
             self._last_tick_time = now
             self.ticks += 1
+            tick_no = self.ticks
+        # the tick is the trace unit: every span below (planner,
+        # executor, compile, committer...) links into one tick-id trace
+        t_tick = time.perf_counter()
+        with trace.span("stream/tick", trace_id=f"tick-{tick_no}",
+                        tick=tick_no) as sp:
+            ran = self._run_tick()
+            sp.set(ran=len(ran))
+        metrics.histogram(
+            "repro_stream_tick_seconds",
+            "wall time per StreamRuntime tick").observe(
+                time.perf_counter() - t_tick)
+        return ran
+
+    def _run_tick(self) -> List[Tuple[str, Any]]:
+        with self._lock:
             due = [cq for cq in self.queries.values()
                    if self.ticks % cq.every_n_ticks == 0]
         ran: List[Tuple[str, Any]] = []
@@ -262,6 +279,11 @@ class StreamRuntime:
                                 for r, wm in marks.items())):
                     with self._lock:
                         cq.wm_skips += 1
+                        skips = cq.wm_skips
+                    metrics.counter(
+                        "repro_stream_wm_skips_total",
+                        "due ticks skipped: no referenced watermark "
+                        "advanced", query=cq.name).set_total(skips)
                     continue
                 cq._wm_at_last_exec = marks
             # a query's latency budget is its own cadence: the gap since
@@ -272,8 +294,10 @@ class StreamRuntime:
             cq._last_exec_start = exec_start
             t0 = time.perf_counter()
             try:
-                response = self.planner.process_query(
-                    cq.bql, is_training_mode=False)
+                with trace.span("stream/query", query=cq.name) as qsp:
+                    response = self.planner.process_query(
+                        cq.bql, is_training_mode=False)
+                    qsp.set(cache_hit=response.plan_cache_hit)
             except Exception as exc:                     # noqa: BLE001
                 # isolate failures (e.g. a tumbling window not complete
                 # yet): the feed and the other standing queries carry on
@@ -324,6 +348,16 @@ class StreamRuntime:
             self.monitor.observe_watermark(
                 name, stream.watermark, late=stream.total_late,
                 pending=stream._pending_rows)
+            # event-time eviction horizon: rows at or below this ts have
+            # been overwritten — windows over them raise (a gauge, so
+            # alerting can catch consumers falling behind the ring)
+            ev = (stream._evicted_ts if hasattr(stream, "_evicted_ts")
+                  else max(s._evicted_ts for s in stream._shards))
+            if ev != float("-inf"):
+                metrics.gauge(
+                    "repro_stream_eviction_ts",
+                    "event-time eviction horizon (windows at or below "
+                    "this ts are gone)", stream=name).set(ev)
         # compiled-query-path counters (backend, compiles, cache hits,
         # fallbacks) — one global block, refreshed every tick so the
         # Monitor/admin view tracks the jit lane's health live

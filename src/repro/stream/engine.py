@@ -74,6 +74,7 @@ import numpy as np
 from repro.core import datamodel as dm
 from repro.core.engines import ENGINE_KINDS, Engine
 from repro.core.executor import DataUnavailableException
+from repro.obs import trace
 
 # reserved per-row field carrying the logical stream's global sequence
 # number inside shard ring buffers (float64 is exact for seq < 2**53)
@@ -558,9 +559,10 @@ class Stream(_MultiProducerIngest):
                     counts.update(late=0, flushed=0,
                                   pending=self._pending_rows)
                 return counts
-        if self.ts_field is not None:
-            return self._append_event_time(cols, n)
-        return self._append_prepared(cols, n)
+        with trace.span("stream/append", stream=self.name, rows=n):
+            if self.ts_field is not None:
+                return self._append_event_time(cols, n)
+            return self._append_prepared(cols, n)
 
     def _append_prepared(self, cols: Dict[str, np.ndarray],
                          n: int) -> Dict[str, int]:
@@ -570,10 +572,11 @@ class Stream(_MultiProducerIngest):
         scatter (one validation per logical batch, not one per shard):
         reserve the seq block under the micro-lock, then publish the
         ring write through the ordered committer."""
-        with self._reserve_lock:
-            ticket = self._committer.issue()
-            self.blocks_reserved += 1
-            self.rows_reserved += n
+        with trace.span("stream/reserve", stream=self.name):
+            with self._reserve_lock:
+                ticket = self._committer.issue()
+                self.blocks_reserved += 1
+                self.rows_reserved += n
 
         def write() -> Dict[str, int]:
             with self._lock:
@@ -583,7 +586,9 @@ class Stream(_MultiProducerIngest):
                 return {"appended": n, "dropped": dropped,
                         "rows": self._count}
 
-        return self._committer.commit(ticket, write)
+        with trace.span("committer/commit", lane=self.name,
+                        ticket=ticket):
+            return self._committer.commit(ticket, write)
 
     def _ingest_locked(self, cols: Dict[str, np.ndarray], n: int) -> int:
         """Write ``n`` rows into the ring (caller holds the lock).  The
@@ -643,7 +648,8 @@ class Stream(_MultiProducerIngest):
         ``max_ts_seen - max_delay`` and everything it passed is flushed
         into the ring in timestamp order.  Rows below the watermark are
         late — counted and dropped, never inserted out of order."""
-        with self._lock:
+        with trace.span("stream/stage", stream=self.name,
+                        rows=n) as sp, self._lock:
             self._last_arrival = self._now()
             cols, kept, nlate = _classify_late(self, cols, n)
             if kept:
@@ -1210,60 +1216,71 @@ class ShardedStream(_MultiProducerIngest):
         n = cols[self.fields[0]].shape[0]
         if any(v.shape[0] != n for v in cols.values()):
             raise StreamException("ragged append batch")
-        if self.ts_field is not None:
-            return self._append_event_time(cols, n)
-        if n == 0:
-            with self._rate_lock:
-                self._append_times.append((time.monotonic(), 0))
-            return {"appended": 0, "dropped": 0,
-                    "rows": sum(s.num_rows for s in self._shards)}
-        nsh = len(self._shards)
-        owner = present = None
-        if self.shard_key is not None:
-            # key-hash owners depend only on the data — computed before
-            # reservation so the micro-lock never touches the batch
-            owner = _key_owners(cols[self.shard_key], nsh)
-            present = np.bincount(owner, minlength=nsh) > 0
-        # -- reserve: seq block + per-shard tickets (micro-lock, O(nsh))
-        with self._reserve_lock:
-            t = self.reserved
-            self.reserved += n
-            if owner is None:
-                touched = self._touched_shards(t, n)
-            else:
-                touched = [i for i in range(nsh) if present[i]]
-            tickets = {i: self._committers[i].issue() for i in touched}
-            self.blocks_reserved += 1
-            self.rows_reserved += n
-        with self._frontier:
-            self._pending_blocks[t] = (n, dict(tickets))
-        # -- stage: partition into per-shard payloads (no locks held)
-        try:
-            parts = self._partition(cols, n, t, owner)
-        except BaseException:
-            # never wedge the lanes: release every issued ticket as an
-            # empty publish and complete the block — its seqs become a
-            # permanent hole (windows over them raise "evicted"), but
-            # every other producer keeps flowing
-            for i in sorted(touched):
-                self._committers[i].commit(tickets[i], lambda: None)
+        with trace.span("stream/append", stream=self.name, rows=n,
+                        shards=len(self._shards)):
+            if self.ts_field is not None:
+                return self._append_event_time(cols, n)
+            if n == 0:
+                with self._rate_lock:
+                    self._append_times.append((time.monotonic(), 0))
+                return {"appended": 0, "dropped": 0,
+                        "rows": sum(s.num_rows for s in self._shards)}
+            nsh = len(self._shards)
+            owner = present = None
+            if self.shard_key is not None:
+                # key-hash owners depend only on the data — computed
+                # before reservation so the micro-lock never touches
+                # the batch
+                owner = _key_owners(cols[self.shard_key], nsh)
+                present = np.bincount(owner, minlength=nsh) > 0
+            # -- reserve: seq block + per-shard tickets (micro-lock,
+            # O(nsh))
+            with trace.span("stream/reserve", stream=self.name), \
+                    self._reserve_lock:
+                t = self.reserved
+                self.reserved += n
+                if owner is None:
+                    touched = self._touched_shards(t, n)
+                else:
+                    touched = [i for i in range(nsh) if present[i]]
+                tickets = {i: self._committers[i].issue()
+                           for i in touched}
+                self.blocks_reserved += 1
+                self.rows_reserved += n
+            with self._frontier:
+                self._pending_blocks[t] = (n, dict(tickets))
+            # -- stage: partition into per-shard payloads (no locks
+            # held)
+            try:
+                with trace.span("stream/stage", stream=self.name,
+                                block=t):
+                    parts = self._partition(cols, n, t, owner)
+            except BaseException:
+                # never wedge the lanes: release every issued ticket as
+                # an empty publish and complete the block — its seqs
+                # become a permanent hole (windows over them raise
+                # "evicted"), but every other producer keeps flowing
+                for i in sorted(touched):
+                    self._committers[i].commit(tickets[i], lambda: None)
+                self._complete_block(t, n)
+                raise
+            # -- publish: per-shard ordered commits (failures release
+            # the lane, see _commit_parts)
+            results, failure = self._commit_parts(touched, tickets,
+                                                  parts, n)
+            # -- complete: advance the committed frontier over every
+            # block whose predecessors have all published (reads only
+            # ever see seqs below the frontier, so no gather can
+            # observe this batch while an earlier one is still in
+            # flight)
             self._complete_block(t, n)
-            raise
-        # -- publish: per-shard ordered commits (failures release the
-        # lane, see _commit_parts)
-        results, failure = self._commit_parts(touched, tickets, parts, n)
-        # -- complete: advance the committed frontier over every block
-        # whose predecessors have all published (reads only ever see
-        # seqs below the frontier, so no gather can observe this batch
-        # while an earlier one is still in flight)
-        self._complete_block(t, n)
-        with self._rate_lock:
-            self._append_times.append((time.monotonic(), n))
-        if failure is not None:
-            raise failure
-        dropped = sum(r["dropped"] for r in results)
-        return {"appended": n, "dropped": dropped,
-                "rows": sum(s.num_rows for s in self._shards)}
+            with self._rate_lock:
+                self._append_times.append((time.monotonic(), n))
+            if failure is not None:
+                raise failure
+            dropped = sum(r["dropped"] for r in results)
+            return {"appended": n, "dropped": dropped,
+                    "rows": sum(s.num_rows for s in self._shards)}
 
     def _complete_block(self, t: int, n: int) -> None:
         """Record block [t, t+n) as fully published and advance the
@@ -1404,10 +1421,12 @@ class ShardedStream(_MultiProducerIngest):
         def publish(i: int) -> Dict[str, int]:
             payload = parts[i]
             try:
-                return self._committers[i].commit(
-                    tickets[i],
-                    lambda: self._shards[i]._append_prepared(
-                        payload, payload[SEQ_FIELD].shape[0]))
+                with trace.span("committer/commit", stream=self.name,
+                                shard=i, ticket=tickets[i]):
+                    return self._committers[i].commit(
+                        tickets[i],
+                        lambda: self._shards[i]._append_prepared(
+                            payload, payload[SEQ_FIELD].shape[0]))
             except BaseException as exc:     # noqa: BLE001 — re-raised
                 failures.append(exc)
                 return {"appended": 0, "dropped": 0}
@@ -1420,7 +1439,8 @@ class ShardedStream(_MultiProducerIngest):
                     self._pool = ThreadPoolExecutor(
                         max_workers=len(self._shards),
                         thread_name_prefix=f"scatter-{self.name}")
-                results = list(self._pool.map(publish, order))
+                results = list(self._pool.map(trace.bind(publish),
+                                              order))
             finally:
                 self._pool_gate.release()
         else:
@@ -1454,7 +1474,8 @@ class ShardedStream(_MultiProducerIngest):
         the *minimum* across shards with data as the watermark basis, so
         one lagging shard holds every window open (use ``flush()`` as
         punctuation for idle shards)."""
-        with self._lock:
+        with trace.span("stream/stage", stream=self.name,
+                        rows=n), self._lock:
             self._last_arrival = self._now()
             cols, kept, nlate = _classify_late(self, cols, n)
             ts = cols[self.ts_field]
@@ -1853,7 +1874,8 @@ class ShardedStream(_MultiProducerIngest):
         watermark and drop counters travel with the state (the Migrator
         keeps the catalog's placement truthful)."""
         from repro.core.migrator import MigrationParams
-        with self._lock:
+        with trace.span("migrator/shard_move", stream=self.name,
+                        shard=idx, dst=to_engine), self._lock:
             if not 0 <= idx < len(self._shards):
                 raise ValueError(
                     f"{self.name!r} has no shard {idx} "

@@ -61,6 +61,7 @@ import numpy as np
 
 from repro.core import datamodel as dm
 from repro.core.engines import Engine
+from repro.obs import metrics
 from repro.stream.engine import (_COMBINABLE_AGGS, ShardedStream, Stream,
                                  StreamException)
 
@@ -130,6 +131,9 @@ def interval_join(left: dm.ArrayObject, right: dm.ArrayObject,
         li, ri = _join_pairs(lt, rt, tol)
     else:
         JOIN_STATS["partial_joins"] += 1
+        metrics.counter("repro_stream_joins_total",
+                        "interval joins executed",
+                        kind="partial").inc()
         rorder = np.argsort(rt, kind="stable")
         rs = rt[rorder]
         li_parts, ri_parts = [], []
@@ -149,6 +153,8 @@ def interval_join(left: dm.ArrayObject, right: dm.ArrayObject,
         ri = np.concatenate(ri_parts) if ri_parts else \
             np.zeros(0, np.int64)
     JOIN_STATS["joins"] += 1
+    metrics.counter("repro_stream_joins_total",
+                    "interval joins executed", kind="full").inc()
     cols: Dict[str, np.ndarray] = {}
     for f, v in la.items():
         cols[f"l_{f}"] = v[li]

@@ -1,6 +1,6 @@
 """The documentation surface is part of tier-1: every fenced example in
-docs/BQL.md must execute against an in-memory deployment (the same gate
-CI runs via tools/check_docs.py)."""
+docs/BQL.md and docs/OPERATIONS.md must execute against an in-memory
+deployment (the same gate CI runs via tools/check_docs.py)."""
 import pathlib
 import runpy
 
@@ -9,8 +9,9 @@ import pytest
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
-def test_docs_bql_examples_execute(monkeypatch, capsys):
-    docs = ROOT / "docs" / "BQL.md"
+@pytest.mark.parametrize("doc", ["BQL.md", "OPERATIONS.md"])
+def test_docs_examples_execute(doc, monkeypatch, capsys):
+    docs = ROOT / "docs" / doc
     gate = ROOT / "tools" / "check_docs.py"
     if not docs.exists() or not gate.exists():
         pytest.skip("docs gate not present")

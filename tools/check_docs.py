@@ -1,8 +1,9 @@
 """Docs-consistency gate: extract every fenced ``bql`` / ``python``
-example from docs/BQL.md and execute it against an in-memory deployment,
-so the documentation cannot silently rot (wired into CI).
+example from docs/BQL.md *and* docs/OPERATIONS.md and execute it
+against an in-memory deployment, so the documentation cannot silently
+rot (wired into CI).
 
-  PYTHONPATH=src python tools/check_docs.py [--docs docs/BQL.md]
+  PYTHONPATH=src python tools/check_docs.py [--docs docs/BQL.md ...]
 
 Harness contract (documented at the top of docs/BQL.md):
 
@@ -123,16 +124,9 @@ def run_pass(docs: str, runnable, backend: str):
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--docs", default="docs/BQL.md")
+    ap.add_argument("--docs", nargs="*",
+                    default=["docs/BQL.md", "docs/OPERATIONS.md"])
     args = ap.parse_args()
-    with open(args.docs) as fh:
-        text = fh.read()
-    blocks = extract_blocks(text)
-    runnable = [(lang, ln, body) for lang, ln, body in blocks
-                if lang in ("bql", "python")]
-    if not runnable:
-        print(f"FAIL: no runnable bql/python blocks in {args.docs}")
-        return 1
 
     # every documented example must run under BOTH query backends: the
     # docs describe one language, and the compiled path promises the
@@ -146,15 +140,24 @@ def main() -> int:
         print("note: jax unavailable — jit pass skipped")
 
     bad = 0
-    for backend in backends:
-        ran, failures = run_pass(args.docs, runnable, backend)
-        for line_no, snippet, tb in failures:
-            print(f"\nFAIL [{backend}] {args.docs}:{line_no}\n"
-                  f"  {snippet}\n{tb}")
-        status = "FAIL" if failures else "OK"
-        print(f"{status} [{backend}]: {ran} documented examples "
-              f"executed, {len(failures)} failed ({args.docs})")
-        bad += len(failures)
+    for docs in args.docs:
+        with open(docs) as fh:
+            text = fh.read()
+        blocks = extract_blocks(text)
+        runnable = [(lang, ln, body) for lang, ln, body in blocks
+                    if lang in ("bql", "python")]
+        if not runnable:
+            print(f"FAIL: no runnable bql/python blocks in {docs}")
+            return 1
+        for backend in backends:
+            ran, failures = run_pass(docs, runnable, backend)
+            for line_no, snippet, tb in failures:
+                print(f"\nFAIL [{backend}] {docs}:{line_no}\n"
+                      f"  {snippet}\n{tb}")
+            status = "FAIL" if failures else "OK"
+            print(f"{status} [{backend}]: {ran} documented examples "
+                  f"executed, {len(failures)} failed ({docs})")
+            bad += len(failures)
     return 1 if bad else 0
 
 
