@@ -368,7 +368,68 @@ def run(batch_rows: int = 512, num_batches: int = 16,
     # near-free — the ratio slides toward 1.0 if it grows overhead, and
     # the committed baseline's ratio gate catches that drift)
     rows.append(_trace_overhead_row(rng, ticks_per_window))
+
+    # -- durability replay RATIO row -----------------------------------------
+    # replayed rows/sec (recover() rebuilding the stream from its
+    # segment log) over durable-live ingest rows/sec, measured paired
+    # per pass.  Self-normalizing: both sides run the same ring-write
+    # code on the same host, so the gate holds machine-independently.
+    rows.append(_replay_rate_row(rng))
     return rows
+
+
+REPLAY_PASSES = 3
+REPLAY_BATCH_ROWS = 512
+REPLAY_BATCHES = 16
+
+
+def _replay_rate_row(rng) -> Tuple:
+    """``stream/replay_rate``: rows/sec of ``recover()`` replaying the
+    segment log vs rows/sec of the durable *live* ingest that wrote it.
+    Bigger is better — replay re-applies committed batches without
+    producer-side reservation work, so it should at least keep up with
+    live ingest; a ratio sliding toward 0 means log decode/apply grew
+    overhead that would stretch crash-recovery windows.
+
+    Noise design: each pass ingests a fresh log then immediately
+    replays it (paired sides back to back), contributing one per-pass
+    ratio; the row reports the median.  Pairing cancels machine-wide
+    drift the same way the trace-overhead row does."""
+    import shutil
+    import tempfile
+
+    from repro.stream import durability
+    from repro.stream.engine import Stream
+
+    batch = {"signal": rng.standard_normal(REPLAY_BATCH_ROWS)}
+    ratios, live_rates, replay_rates = [], [], []
+    for _ in range(REPLAY_PASSES):
+        d = tempfile.mkdtemp(prefix="bench_replay_")
+        try:
+            s = Stream("bench.replay", ("signal",),
+                       REPLAY_BATCH_ROWS * REPLAY_BATCHES)
+            durability.attach(s, d)
+            t0 = time.perf_counter()
+            for _ in range(REPLAY_BATCHES):
+                s.append(batch)
+            live_s = time.perf_counter() - t0
+            result = durability.recover(d, repair=False)
+            rows_total = REPLAY_BATCH_ROWS * REPLAY_BATCHES
+            assert result.rows_replayed == rows_total
+            live_rate = rows_total / live_s
+            replay_rate = rows_total / result.seconds
+            ratios.append(replay_rate / live_rate)
+            live_rates.append(live_rate)
+            replay_rates.append(replay_rate)
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+    ratio = float(np.median(ratios))
+    live = float(np.median(live_rates))
+    replay = float(np.median(replay_rates))
+    LAST_META["replay_rate_ratio"] = round(ratio, 3)
+    return ("stream/replay_rate", ratio,
+            f"replay_rows_per_sec={replay:.0f}_live={live:.0f}"
+            f"_rows={REPLAY_BATCH_ROWS * REPLAY_BATCHES}", "ratio")
 
 
 JIT_PASSES = 5

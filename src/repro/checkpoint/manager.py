@@ -32,14 +32,25 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._pending: Optional[threading.Thread] = None
+        # serializes _write (tmp dir + promote + keep-last-k prune): a
+        # blocking save overlapping an async one must never let _gc
+        # prune a sibling's half-written .tmp or race two promotes
+        self._write_lock = threading.Lock()
 
     # -- save -----------------------------------------------------------------
     def save(self, step: int, state, *, blocking: bool = True) -> str:
-        """Write state under <dir>/step_<n>.tmp then atomically promote."""
+        """Write state under <dir>/step_<n>.tmp then atomically promote.
+
+        Any still-pending async save is joined first — for BOTH modes.
+        A blocking save that skipped the join could run its keep-last-k
+        prune while the async thread is still writing, deleting the
+        in-flight checkpoint mid-write (and _gc could even prune the
+        promoted-but-newer step).  Join-then-write keeps saves strictly
+        ordered."""
         host_state = jax.tree.map(np.asarray, jax.device_get(state))
+        self.wait()
         if blocking:
             return self._write(step, host_state)
-        self.wait()
         self._pending = threading.Thread(
             target=self._write, args=(step, host_state), daemon=True)
         self._pending.start()
@@ -51,27 +62,35 @@ class CheckpointManager:
             self._pending = None
 
     def _write(self, step: int, host_state) -> str:
-        final = os.path.join(self.directory, f"step_{step:08d}")
-        tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        flat = _flatten_with_paths(host_state)
-        manifest = {"step": step, "leaves": {}, "time": time.time()}
-        for key, leaf in flat.items():
-            fname = key.replace("/", "__") + ".npy"
-            arr = np.asarray(leaf)
-            np.save(os.path.join(tmp, fname), arr)
-            manifest["leaves"][key] = {
-                "file": fname, "shape": list(arr.shape),
-                "dtype": str(arr.dtype)}
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f, indent=1)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.replace(tmp, final)              # atomic promote
-        self._gc()
-        return final
+        # crash points let the durability test layer kill a save between
+        # the tmp write, the atomic promote, and the prune (late import:
+        # runtime.fault imports this module)
+        from repro.runtime.fault import crash_point
+
+        with self._write_lock:
+            final = os.path.join(self.directory, f"step_{step:08d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            flat = _flatten_with_paths(host_state)
+            manifest = {"step": step, "leaves": {}, "time": time.time()}
+            for key, leaf in flat.items():
+                fname = key.replace("/", "__") + ".npy"
+                arr = np.asarray(leaf)
+                np.save(os.path.join(tmp, fname), arr)
+                manifest["leaves"][key] = {
+                    "file": fname, "shape": list(arr.shape),
+                    "dtype": str(arr.dtype)}
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f, indent=1)
+            crash_point("checkpoint/promote")   # tmp complete, not live
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)              # atomic promote
+            crash_point("checkpoint/gc")        # promoted, not pruned
+            self._gc()
+            return final
 
     def _gc(self) -> None:
         steps = self.all_steps()
@@ -125,3 +144,19 @@ class CheckpointManager:
                            for p in pth)
             ordered.append(restored[key])
         return jax.tree_util.tree_unflatten(treedef, ordered), step
+
+    def restore_flat(self, step: Optional[int] = None
+                     ) -> Dict[str, np.ndarray]:
+        """Template-free restore: the manifest's leaves as a flat
+        {key: host array} dict.  This is the recovery entry point for
+        callers that serialize self-describing state (e.g. the stream
+        durability layer) — after a crash there is no live object to
+        borrow a template pytree from."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        return {key: np.load(os.path.join(path, meta["file"]))
+                for key, meta in manifest["leaves"].items()}

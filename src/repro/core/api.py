@@ -107,7 +107,10 @@ class BigDawg:
                         rolling: bool = True, block_rows: int = 64,
                         ts_field: Optional[str] = None,
                         max_delay: float = 0.0,
-                        idle_timeout: Optional[float] = None):
+                        idle_timeout: Optional[float] = None,
+                        durability: Optional[str] = None,
+                        checkpoint_every_rows: Optional[int] = None,
+                        dead_letter: bool = False):
         """Create a ring-buffer stream and register it in the catalog (so
         the Planner can place streaming nodes).
 
@@ -140,6 +143,17 @@ class BigDawg:
         blocks instead of serializing on a coordinator lock, and
         ``stream.ingest_concurrency()`` (also in
         ``admin.status()["streams"]``) reports the contention counters.
+
+        ``durability=<dir>`` makes the stream crash-safe: committed
+        batches are logged write-behind to a per-shard segment log
+        under ``<dir>`` and the full state checkpoints every
+        ``checkpoint_every_rows`` logged rows (driven by
+        ``streams.tick()``; ``None`` = explicit checkpoints only).
+        ``recover_stream`` rebuilds it after a crash.  ``dead_letter``
+        diverts late event-time rows into a queryable ``{name}.__late``
+        stream (recorded in the log, so replay preserves them) instead
+        of only counting them.  See docs/OPERATIONS.md "Durability &
+        replay".
         """
         from repro.stream.engine import (SEQ_FIELD, ShardedStream, Stream,
                                          StreamEngine)
@@ -151,6 +165,9 @@ class BigDawg:
                             idle_timeout=idle_timeout)
             self.register_object(engine_name, name, stream,
                                  fields=tuple(fields))
+            self._stream_extras(engine_name, stream, capacity,
+                                durability, checkpoint_every_rows,
+                                dead_letter)
             return stream
         spread = num_engines or shards
         # ensure_stream_engines returns the whole (possibly larger)
@@ -179,7 +196,86 @@ class BigDawg:
                              fields=tuple(fields))
         for ename in participating[1:]:
             self.engines[ename].put(name, handle)
+        self._stream_extras(engine_name, handle, capacity, durability,
+                            checkpoint_every_rows, dead_letter)
         return handle
+
+    def _stream_extras(self, engine_name: str, stream, capacity: int,
+                       durability: Optional[str],
+                       checkpoint_every_rows: Optional[int],
+                       dead_letter: bool) -> None:
+        """Shared tail of register_stream/recover_stream: dead-letter
+        sink registration and the durability attach (sink first — the
+        durability meta must record it)."""
+        from repro.stream.engine import Stream
+        if dead_letter and stream._late_sink is None:
+            stream._late_sink = Stream(f"{stream.name}.__late",
+                                       stream.fields, capacity)
+        if stream._late_sink is not None:
+            self.register_object(engine_name, stream._late_sink.name,
+                                 stream._late_sink,
+                                 fields=tuple(stream.fields))
+        if durability is not None:
+            from repro.stream.durability import attach
+            attach(stream, durability,
+                   checkpoint_every_rows=checkpoint_every_rows)
+            self.streams.register_durable(stream)
+
+    def recover_stream(self, engine_name: str, directory: str):
+        """Rebuild a durable stream from its on-disk directory (latest
+        checkpoint + log-tail replay, repairing any torn tail), register
+        it — shard rings on their original engines, the handle on every
+        participating engine, the dead-letter sink if any — and
+        re-attach durability so ingest continues into the same log.
+        Returns the recovered stream; the house invariant is that it is
+        bit-identical to the crashed one's durable prefix."""
+        from repro.stream.durability import recover
+        result = recover(directory)
+        stream = result.stream
+        meta = result  # RecoveryResult
+        if hasattr(stream, "shard_engines"):      # ShardedStream
+            engines = stream.shard_engines()
+            pool = [int(e[len("streamstore"):]) + 1 for e in engines
+                    if e.startswith("streamstore")
+                    and e[len("streamstore"):].isdigit()]
+            if pool:
+                self.ensure_stream_engines(max(pool))
+            for ename, shard in zip(engines, stream._shards):
+                self.register_object(ename, shard.name, shard,
+                                     fields=shard.fields)
+            participating = sorted(set(engines) | {engine_name})
+            self.register_object(participating[0], stream.name, stream,
+                                 fields=tuple(stream.fields))
+            for ename in participating[1:]:
+                self.engines[ename].put(stream.name, stream)
+        else:
+            self.register_object(engine_name, stream.name, stream,
+                                 fields=tuple(stream.fields))
+        if result.late_sink is not None:
+            self.register_object(engine_name, result.late_sink.name,
+                                 result.late_sink,
+                                 fields=tuple(stream.fields))
+        import json as _json
+        import os as _os
+        with open(_os.path.join(directory, "meta.json")) as f:
+            knobs = _json.load(f)
+        from repro.stream.durability import attach
+        durable = attach(stream, directory,
+                         checkpoint_every_rows=knobs.get(
+                             "checkpoint_every_rows"),
+                         keep=knobs.get("keep", 3))
+        durable.recovered += 1
+        durable.last_recovery = {
+            "checkpoint_step": meta.checkpoint_step,
+            "records_replayed": meta.records_replayed,
+            "rows_replayed": meta.rows_replayed,
+            "seconds": meta.seconds,
+            "truncated_records": meta.truncated_records}
+        self.streams.register_durable(stream)
+        self.monitor.observe_recovery(stream.name, meta.rows_replayed,
+                                      meta.seconds)
+        self.monitor.observe_durability(stream.name, durable.stats())
+        return stream
 
     def rebalance_stream(self, stream: str, shard: Optional[int] = None,
                          to_engine: Optional[str] = None):

@@ -74,6 +74,11 @@ class Monitor:
         # process-wide dict, not per-stream — the jit plan cache is keyed
         # by stream identity internally but its counters are global.
         self.jit_stats: Dict[str, Any] = {}
+        # per-stream durability health: segment-log/checkpoint counters
+        # (StreamRuntime.tick feeds this from StreamDurability.stats())
+        # and the last recover_stream outcome
+        self.durability_stats: Dict[str, Dict[str, Any]] = {}
+        self.recoveries: Dict[str, Dict[str, Any]] = {}
 
     # -- benchmark API (paper naming) ----------------------------------------
     def add_benchmarks(self, signature: Signature, lean: bool,
@@ -285,6 +290,28 @@ class Monitor:
         with self._lock:
             self.jit_stats = dict(stats)
 
+    def observe_durability(self, stream_name: str,
+                           stats: Dict[str, Any]) -> None:
+        """Record a durable stream's segment-log/checkpoint counters
+        (the ``StreamDurability.stats()`` block).  StreamRuntime.tick
+        feeds this; admin.status()["streams"]["durability"] shows it."""
+        with self._lock:
+            self.durability_stats[stream_name] = dict(stats)
+        metrics.gauge("repro_stream_log_bytes",
+                      "segment-log bytes on disk",
+                      stream=stream_name).set(stats.get("log_bytes", 0))
+        metrics.gauge("repro_stream_log_segments",
+                      "segment files in the wal",
+                      stream=stream_name).set(stats.get("segments", 0))
+
+    def observe_recovery(self, stream_name: str, rows: int,
+                         seconds: float) -> None:
+        """Record a recover_stream outcome (rows replayed from the
+        segment log and the wall-clock rebuild time)."""
+        with self._lock:
+            self.recoveries[stream_name] = {
+                "rows_replayed": int(rows), "seconds": float(seconds)}
+
     @staticmethod
     def shard_load(stats: Dict[str, float]) -> float:
         """One shard's *lifetime* ingest load: appended rows, weighted up
@@ -406,6 +433,11 @@ class Monitor:
                 "ingest_stats": {k: dict(v)
                                  for k, v in self.ingest_stats.items()},
                 "jit_stats": dict(self.jit_stats),
+                "durability_stats": {
+                    k: dict(v)
+                    for k, v in self.durability_stats.items()},
+                "recoveries": {k: dict(v)
+                               for k, v in self.recoveries.items()},
                 "shard_stats": {
                     name: {i: dict(st) for i, st in shards.items()}
                     for name, shards in self.shard_stats.items()},

@@ -10,8 +10,11 @@ by tests.  The straggler path feeds the polystore Monitor (per-engine EWMA
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import fnmatch
 import random
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -24,6 +27,101 @@ class NodeFailure(Exception):
         super().__init__(f"host {host_id} failed at step {step}")
         self.host_id = host_id
         self.step = step
+
+
+class SimulatedCrash(BaseException):
+    """Raised by an armed crash point to simulate a process kill at a
+    precise instruction boundary.  Deliberately a ``BaseException``:
+    recovery-minded ``except Exception`` handlers in the code under
+    test must NOT swallow a kill — only the test harness catches it.
+    """
+
+    def __init__(self, point: str, hit: int) -> None:
+        super().__init__(f"simulated crash at {point!r} (hit #{hit})")
+        self.point = point
+        self.hit = hit
+
+
+# -- crash points ------------------------------------------------------------
+#
+# Durable-path code (segment log appends, checkpoint promote/prune,
+# commit/flush boundaries) calls ``crash_point("layer/step")`` at every
+# instruction boundary where a real kill could land.  Disarmed — the
+# production state — the call is one attribute load and a None check.
+# Tests arm a deterministic countdown: the k-th matching hit raises
+# ``SimulatedCrash``, so a property-test strategy that draws ``k``
+# enumerates the entire crash surface, and shrinking ``k`` toward 1
+# minimizes a failure to the earliest crash site that exhibits it.
+
+_CRASH_LOCK = threading.Lock()
+_ARMED: Optional[Dict[str, Any]] = None
+
+
+def arm_crash_point(match: Optional[str] = None, at_hit: int = 1) -> None:
+    """Arm the global crash injector: the ``at_hit``-th crash point whose
+    name matches the ``match`` glob (all points when None) raises
+    ``SimulatedCrash``.  Hits are counted process-wide under a lock, so
+    the schedule is deterministic for a deterministic workload."""
+    global _ARMED
+    assert at_hit >= 1
+    with _CRASH_LOCK:
+        _ARMED = {"match": match, "remaining": int(at_hit),
+                  "hits": [], "fired": None}
+
+
+def disarm_crash_points() -> Dict[str, Any]:
+    """Disarm and return the report: ``hits`` (every matching point
+    reached, in order) and ``fired`` (the point that crashed, or None —
+    e.g. when ``at_hit`` exceeded the workload's crash surface, which is
+    how tests *count* the surface before sweeping it)."""
+    global _ARMED
+    with _CRASH_LOCK:
+        report, _ARMED = _ARMED, None
+    return report if report is not None else {"hits": [], "fired": None}
+
+
+def crash_points_armed() -> bool:
+    return _ARMED is not None
+
+
+def crash_point(name: str,
+                flush: Optional[Callable[[], None]] = None) -> None:
+    """A possible kill site.  No-op unless armed.  When this hit fires,
+    ``flush`` (if given) runs first — the caller's chance to push
+    buffered bytes to disk so the simulated kill leaves exactly the
+    torn on-disk state a real kill at this boundary would."""
+    if _ARMED is None:
+        return
+    with _CRASH_LOCK:
+        armed = _ARMED
+        if armed is None:
+            return
+        if armed["match"] is not None and \
+                not fnmatch.fnmatch(name, armed["match"]):
+            return
+        armed["hits"].append(name)
+        armed["remaining"] -= 1
+        if armed["remaining"] > 0:
+            return
+        if armed["fired"] is not None:        # crash once, not per thread
+            return
+        armed["fired"] = name
+        hit = len(armed["hits"])
+    if flush is not None:
+        flush()
+    raise SimulatedCrash(name, hit)
+
+
+@contextlib.contextmanager
+def crash_at(match: Optional[str] = None, at_hit: int = 1):
+    """Context manager: arm on entry, disarm on exit, yield a mutable
+    report dict that is filled in on exit (``hits``/``fired``)."""
+    arm_crash_point(match, at_hit)
+    report: Dict[str, Any] = {}
+    try:
+        yield report
+    finally:
+        report.update(disarm_crash_points())
 
 
 @dataclasses.dataclass

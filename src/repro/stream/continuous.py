@@ -123,6 +123,14 @@ class StreamRuntime:
         self.last_driver_error: Optional[str] = None
         # live shard rebalances performed through rebalance()
         self.rebalances: List[Dict[str, Any]] = []
+        # durable streams (register_stream(durability=...) /
+        # recover_stream): tick drives their checkpoint cadence and
+        # feeds their log/checkpoint stats to the Monitor
+        self._durable_streams: List[Any] = []
+
+    def register_durable(self, stream) -> None:
+        if stream not in self._durable_streams:
+            self._durable_streams.append(stream)
 
     # -- registration ---------------------------------------------------------
     def register_continuous(self, query: str, every_n_ticks: int = 1,
@@ -358,6 +366,17 @@ class StreamRuntime:
                     "repro_stream_eviction_ts",
                     "event-time eviction horizon (windows at or below "
                     "this ts are gone)", stream=name).set(ev)
+        # durability cadence: checkpoint any durable stream that has
+        # logged checkpoint_every_rows rows since its last checkpoint
+        # (async save — the tick thread never blocks on .npy I/O), and
+        # mirror log/checkpoint stats into the Monitor
+        for stream in self._durable_streams:
+            durable = stream._durable
+            if durable is None:
+                continue
+            durable.maybe_checkpoint()
+            self.monitor.observe_durability(stream.name,
+                                            durable.stats())
         # compiled-query-path counters (backend, compiles, cache hits,
         # fallbacks) — one global block, refreshed every tick so the
         # Monitor/admin view tracks the jit lane's health live

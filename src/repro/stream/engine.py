@@ -156,12 +156,23 @@ def _classify_late(stream, cols: Dict[str, np.ndarray],
     The single definition of lateness — Stream and ShardedStream must
     never disagree on the boundary (``ts == watermark`` is NOT late:
     the ring's flushed rows all have ts <= watermark, so an equal row
-    still appends in order)."""
+    still appends in order).
+
+    With a dead-letter sink attached (``register_stream(...,
+    dead_letter=True)``), late rows additionally land in the
+    ``{name}.__late`` side stream — queryable history instead of only
+    a counter.  The sink is a plain leaf stream with its own locks, so
+    appending to it under the caller's lock cannot deadlock, and the
+    sink append is in arrival order (the caller's lock serializes
+    arrivals), so replay reproduces it deterministically."""
     ts = cols[stream.ts_field]
     late_mask = ts < stream.watermark
     nlate = int(late_mask.sum())
     if nlate:
         stream.total_late += nlate
+        if stream._late_sink is not None:
+            stream._late_sink._append_prepared(
+                {f: v[late_mask] for f, v in cols.items()}, nlate)
         keep = ~late_mask
         cols = {f: v[keep] for f, v in cols.items()}
     return cols, n - nlate, nlate
@@ -528,6 +539,12 @@ class Stream(_MultiProducerIngest):
         self.idle_timeout = idle_timeout
         self._last_arrival: Optional[float] = None
         self._now = time.monotonic        # injectable for tests
+        # -- durability (opt-in, see repro.stream.durability): the
+        # write-behind segment-log hook and the late-row dead-letter
+        # sink.  Both None by default — the hot path pays one attribute
+        # check per batch and nothing else.
+        self._durable = None
+        self._late_sink: Optional["Stream"] = None
 
     # -- ingest ---------------------------------------------------------------
     def append(self, rows: Dict[str, Iterable[float]]) -> Dict[str, int]:
@@ -583,8 +600,17 @@ class Stream(_MultiProducerIngest):
                 dropped = self._ingest_locked(cols, n)
                 self._append_times.append((time.monotonic(), n))
                 self._last_arrival = self._now()
-                return {"appended": n, "dropped": dropped,
-                        "rows": self._count}
+                counts = {"appended": n, "dropped": dropped,
+                          "rows": self._count}
+                seq_start = self.total_appended - n
+            if self._durable is not None:
+                # write-behind: the batch is already published to the
+                # ring (readers can see it); logging stays inside the
+                # committer's ordered section so the log is strictly in
+                # seq order, but outside the ring lock so readers never
+                # wait on log I/O
+                self._durable.log_append(seq_start, cols, n)
+            return counts
 
         with trace.span("committer/commit", lane=self.name,
                         ticket=ticket):
@@ -651,6 +677,12 @@ class Stream(_MultiProducerIngest):
         with trace.span("stream/stage", stream=self.name,
                         rows=n) as sp, self._lock:
             self._last_arrival = self._now()
+            if self._durable is not None:
+                # log the arrival batch BEFORE late classification: the
+                # log carries every row that arrived (late ones
+                # included), so replay re-runs classification and
+                # reproduces total_late and the dead-letter sink
+                self._durable.log_arrive(cols, n)
             cols, kept, nlate = _classify_late(self, cols, n)
             if kept:
                 self._pending.append(cols)
@@ -707,6 +739,11 @@ class Stream(_MultiProducerIngest):
                 raise StreamException(
                     f"stream {self.name!r} has no event-time field")
             target = self.max_ts_seen if to_ts is None else float(to_ts)
+            if self._durable is not None and target > self.watermark:
+                # punctuation is external input (wall clock / operator),
+                # not derivable from arrivals — log the resolved target
+                # so replay applies the same watermark advance
+                self._durable.log_flush(target)
             flushed, dropped = self._flush_locked(target)
             return {"flushed": flushed, "dropped": dropped,
                     "watermark": self.watermark,
@@ -727,6 +764,9 @@ class Stream(_MultiProducerIngest):
                     or self._now() - self._last_arrival
                     < self.idle_timeout):
                 return {"flushed": 0, "dropped": 0}
+            if self._durable is not None \
+                    and self.max_ts_seen > self.watermark:
+                self._durable.log_flush(self.max_ts_seen)
             flushed, dropped = self._flush_locked(self.max_ts_seen)
             return {"flushed": flushed, "dropped": dropped}
 
@@ -957,7 +997,14 @@ class Stream(_MultiProducerIngest):
         paused across the whole move."""
         self._committer.quiesce()
         with self._lock:
-            return {
+            return self._export_locked()
+
+    def _export_locked(self) -> Dict[str, Any]:
+        """The export body (caller holds the lock AND has already
+        settled the committer — quiesced for a migration export,
+        paused for a durability checkpoint: quiescing under an active
+        pause would deadlock on tickets issued after the pause)."""
+        return {
                 "name": self.name, "fields": self.fields,
                 "capacity": self.capacity, "rolling": self.rolling,
                 "cols": {f: v.copy() for f, v in self._cols.items()},
@@ -1019,6 +1066,31 @@ class Stream(_MultiProducerIngest):
         stream.rows_reserved = int(state.get(
             "rows_reserved", stream.total_appended))
         return stream
+
+    # -- durability checkpoint hook -------------------------------------------
+    def _checkpoint_snapshot(self, capture):
+        """Export the full state at an instant where the ring and the
+        write-behind segment log agree, running ``capture()`` (the
+        durability layer reads its per-lane log positions) at that same
+        instant.  Returns (state dict, capture()'s result).
+
+        Event-time streams ingest and log under ``self._lock``, so the
+        lock alone is the coherence point.  Seq-ordered streams log
+        inside the committer's ordered section *after* the ring write:
+        freezing reservations (micro-lock) and draining the lane
+        (``pause``) leaves ring and log equal; in-flight reservations
+        at the freeze are drained, not lost."""
+        if self.ts_field is not None:
+            with self._lock:
+                return self._export_locked(), capture()
+        with self._reserve_lock:
+            self._committer.pause()
+            try:
+                with self._lock:
+                    state = self._export_locked()
+                return state, capture()
+            finally:
+                self._committer.resume()
 
     # -- island data-model plumbing ------------------------------------------
     @property
@@ -1163,6 +1235,10 @@ class ShardedStream(_MultiProducerIngest):
         self.migrations = 0               # live shard moves (rebalances)
         self._pool: Optional[ThreadPoolExecutor] = None
         self._lock = threading.RLock()
+        # -- durability hooks (see repro.stream.durability): None until
+        # attached — the hot path pays one attribute check per batch
+        self._durable = None
+        self._late_sink: Optional[Stream] = None
 
     # -- topology -------------------------------------------------------------
     @property
@@ -1267,7 +1343,7 @@ class ShardedStream(_MultiProducerIngest):
             # -- publish: per-shard ordered commits (failures release
             # the lane, see _commit_parts)
             results, failure = self._commit_parts(touched, tickets,
-                                                  parts, n)
+                                                  parts, n, t)
             # -- complete: advance the committed frontier over every
             # block whose predecessors have all published (reads only
             # ever see seqs below the frontier, so no gather can
@@ -1397,9 +1473,9 @@ class ShardedStream(_MultiProducerIngest):
         return parts
 
     def _commit_parts(self, touched: List[int], tickets: Dict[int, int],
-                      parts: List[Dict[str, np.ndarray]], n: int
-                      ) -> Tuple[List[Dict[str, int]],
-                                 Optional[BaseException]]:
+                      parts: List[Dict[str, np.ndarray]], n: int,
+                      t: int) -> Tuple[List[Dict[str, int]],
+                                       Optional[BaseException]]:
         """Publish each staged payload through its shard's ordered
         committer.  Every issued ticket MUST commit — even on failure —
         or later blocks on that shard would wait forever: a publish
@@ -1420,13 +1496,24 @@ class ShardedStream(_MultiProducerIngest):
 
         def publish(i: int) -> Dict[str, int]:
             payload = parts[i]
+
+            def ring_write() -> Dict[str, int]:
+                counts = self._shards[i]._append_prepared(
+                    payload, payload[SEQ_FIELD].shape[0])
+                if self._durable is not None:
+                    # write-behind per-shard log: inside this lane's
+                    # ordered section (records stay in seq order per
+                    # lane) and after the ring write published; the
+                    # record carries the block bounds so recovery can
+                    # cut an incompletely-logged block
+                    self._durable.log_shard(i, t, n, payload)
+                return counts
+
             try:
                 with trace.span("committer/commit", stream=self.name,
                                 shard=i, ticket=tickets[i]):
-                    return self._committers[i].commit(
-                        tickets[i],
-                        lambda: self._shards[i]._append_prepared(
-                            payload, payload[SEQ_FIELD].shape[0]))
+                    return self._committers[i].commit(tickets[i],
+                                                      ring_write)
             except BaseException as exc:     # noqa: BLE001 — re-raised
                 failures.append(exc)
                 return {"appended": 0, "dropped": 0}
@@ -1477,6 +1564,12 @@ class ShardedStream(_MultiProducerIngest):
         with trace.span("stream/stage", stream=self.name,
                         rows=n), self._lock:
             self._last_arrival = self._now()
+            if self._durable is not None:
+                # event-time scatter is coordinator-serialized: ONE
+                # lane of arrival records (pre-late-classification,
+                # so replay reproduces total_late and the dead-letter
+                # sink), not per-shard logs
+                self._durable.log_arrive(cols, n)
             cols, kept, nlate = _classify_late(self, cols, n)
             ts = cols[self.ts_field]
             if kept:
@@ -1597,6 +1690,8 @@ class ShardedStream(_MultiProducerIngest):
                 raise StreamException(
                     f"stream {self.name!r} has no event-time field")
             target = self.max_ts_seen if to_ts is None else float(to_ts)
+            if self._durable is not None and target > self.watermark:
+                self._durable.log_flush(target)
             flushed, dropped = self._flush_locked(target)
             return {"flushed": flushed, "dropped": dropped,
                     "watermark": self.watermark,
@@ -1618,6 +1713,11 @@ class ShardedStream(_MultiProducerIngest):
                     >= self.idle_timeout):
                 # the whole stream went quiet: flush it out entirely
                 target = max(target, self.max_ts_seen)
+            if self._durable is not None and target > self.watermark:
+                # idle punctuation is wall-clock input: log the resolved
+                # target so replay advances the same watermark without
+                # re-evaluating idleness
+                self._durable.log_flush(target)
             flushed, dropped = self._flush_locked(target)
             return {"flushed": flushed, "dropped": dropped}
 
@@ -1906,6 +2006,120 @@ class ShardedStream(_MultiProducerIngest):
             if not engines[to_engine].has(self.name):
                 engines[to_engine].put(self.name, self)
             return result
+
+    # -- durability checkpoint / state export ----------------------------------
+    def _export_locked(self) -> Dict[str, Any]:
+        """Full coordinator + shard state (caller holds the coordinator
+        lock and has settled every shard committer — see
+        ``_checkpoint_snapshot``)."""
+        with self._all_shard_locks():
+            shard_states = [s._export_locked() for s in self._shards]
+        return {
+            "kind": "sharded", "name": self.name, "fields": self.fields,
+            "shard_key": self.shard_key, "block_rows": self.block_rows,
+            "ts_field": self.ts_field, "max_delay": self.max_delay,
+            "idle_timeout": self.idle_timeout,
+            "engines": list(self._engines),
+            "shards": shard_states,
+            "total_appended": self.total_appended,
+            "blocks_reserved": self.blocks_reserved,
+            "rows_reserved": self.rows_reserved,
+            "blocks_abandoned": self.blocks_abandoned,
+            "watermark": self.watermark,
+            "max_ts_seen": self.max_ts_seen,
+            "min_ts_seen": self.min_ts_seen,
+            "total_late": self.total_late,
+            "pending": [{f: v.copy() for f, v in b.items()}
+                        for b in self._pending],
+            "pending_arrivals": [a.copy()
+                                 for a in self._pending_arrivals],
+            "arrivals": self._arrivals,
+            "shard_max_ts": list(self._shard_max_ts),
+            "migrations": self.migrations,
+        }
+
+    def export_state(self) -> Dict[str, Any]:
+        """Deep-copy the full live state (coordinator + every shard
+        ring) — the sharded analog of ``Stream.export_state``, used by
+        the durability checkpoint.  Reservations are frozen and every
+        shard lane drained first, so the exported frontier equals the
+        reservation counter (no in-flight blocks are lost)."""
+        state, _ = self._checkpoint_snapshot(lambda: None)
+        return state
+
+    def _checkpoint_snapshot(self, capture):
+        """Export state at an instant where every shard ring, the
+        committed frontier, and the write-behind log agree, running
+        ``capture()`` at that instant (see ``Stream`` counterpart).
+
+        Event-time sharded streams do all ring writes and logging under
+        the coordinator lock, so that lock is the coherence point.
+        Seq-ordered ones freeze reservations, drain every shard lane
+        (logs are written inside the lanes' ordered sections), then
+        wait for the committed frontier to reach the reservation
+        counter — block completion runs on producer threads right
+        after their last lane commit, so this wait is bounded."""
+        if self.ts_field is not None:
+            with self._lock:
+                return self._export_locked(), capture()
+        with self._reserve_lock:
+            for committer in self._committers:
+                committer.pause()
+            try:
+                deadline = time.monotonic() + 60.0
+                with self._frontier:
+                    while self.total_appended < self.reserved:
+                        if not self._frontier.wait(
+                                timeout=deadline - time.monotonic()):
+                            raise StreamException(
+                                f"stream {self.name!r}: checkpoint "
+                                f"frontier settle timed out at "
+                                f"{self.total_appended}/{self.reserved}")
+                        self._reap_stalled_locked()
+                with self._lock:
+                    state = self._export_locked()
+                return state, capture()
+            finally:
+                for committer in self._committers:
+                    committer.resume()
+
+    @classmethod
+    def from_state(cls, state: Dict[str, Any]) -> "ShardedStream":
+        shards = [Stream.from_state(s) for s in state["shards"]]
+        stream = cls(state["name"], state["fields"],
+                     list(zip(state["engines"], shards)),
+                     shard_key=state.get("shard_key"),
+                     block_rows=state.get("block_rows", 64),
+                     ts_field=state.get("ts_field"),
+                     max_delay=state.get("max_delay", 0.0),
+                     idle_timeout=state.get("idle_timeout"))
+        stream.total_appended = int(state["total_appended"])
+        # in-flight reservations at export time were drained into the
+        # frontier, so the restored reservation counter IS the frontier
+        stream.reserved = stream.total_appended
+        stream.blocks_reserved = int(state.get("blocks_reserved", 0))
+        stream.rows_reserved = int(state.get("rows_reserved", 0))
+        stream.blocks_abandoned = int(state.get("blocks_abandoned", 0))
+        stream.watermark = float(state.get("watermark", float("-inf")))
+        stream.max_ts_seen = float(state.get("max_ts_seen",
+                                             float("-inf")))
+        stream.min_ts_seen = float(state.get("min_ts_seen",
+                                             float("inf")))
+        stream.total_late = int(state.get("total_late", 0))
+        stream._pending = [{f: np.asarray(v, np.float64)
+                            for f, v in b.items()}
+                           for b in state.get("pending", [])]
+        stream._pending_arrivals = [
+            np.asarray(a, np.int64)
+            for a in state.get("pending_arrivals", [])]
+        stream._pending_rows = sum(
+            b[stream.fields[0]].shape[0] for b in stream._pending)
+        stream._arrivals = int(state.get("arrivals", 0))
+        stream._shard_max_ts = [float(t) for t in
+                                state.get("shard_max_ts",
+                                          stream._shard_max_ts)]
+        stream.migrations = int(state.get("migrations", 0))
+        return stream
 
     def close(self) -> None:
         """Shut down the scatter fan-out pool.  Optional: a dropped

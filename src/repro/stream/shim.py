@@ -329,6 +329,15 @@ def execute_stream(engine: Engine, query: str):
         stream = _get_stream(engine, args[0])
         return dm.Table({k: jnp.asarray([float(v)])
                          for k, v in stream.ingest_concurrency().items()})
+    if fn == "replay":
+        # rebuild the durable stream from its segment log into a
+        # detached clone (read-only — the live log is untouched), timing
+        # the tail replay: the log as a deterministic load generator.
+        # identical=1.0 iff the clone matches the live stream bit-wise.
+        from repro.stream.durability import replay_clone
+        stream = _get_stream(engine, args[0])
+        return dm.Table({k: jnp.asarray([float(v)])
+                         for k, v in replay_clone(stream).items()})
     if fn == "aggregate":
         if len(args) != 2:
             raise ValueError(f"aggregate needs (expr, fn(attr)): {q!r}")
