@@ -31,7 +31,7 @@ import traceback
 from typing import Any, Dict, List, Tuple
 
 SUITES = ("fig5", "fig6", "migration", "kernels", "planner", "stream",
-          "roofline")
+          "serve", "roofline")
 
 
 def _run_suite(name: str, runs: int) -> List[Tuple[str, float, str]]:
@@ -53,6 +53,9 @@ def _run_suite(name: str, runs: int) -> List[Tuple[str, float, str]]:
     if name == "stream":
         from benchmarks import stream_bench
         return stream_bench.run()
+    if name == "serve":
+        from benchmarks import serve_bench
+        return serve_bench.run()
     if name == "roofline":
         from benchmarks import roofline
         return roofline.run()
@@ -180,6 +183,9 @@ def main() -> None:
                     # trajectories stay comparable across shard configs
                     from benchmarks import stream_bench
                     report["meta"]["stream"] = dict(stream_bench.LAST_META)
+                if name == "serve":
+                    from benchmarks import serve_bench
+                    report["meta"]["serve"] = dict(serve_bench.LAST_META)
                 for row in rows:
                     row_name, us, derived = row[0], row[1], row[2]
                     kind = row[3] if len(row) > 3 else "time"

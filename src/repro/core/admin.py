@@ -77,6 +77,10 @@ def status(bd: BigDawg) -> Dict[str, Any]:
     # last recover_stream outcome (fed per tick for durable streams)
     out["streams"]["durability"] = snap["durability_stats"]
     out["streams"]["recoveries"] = snap["recoveries"]
+    # serving front door: tenants, subscriptions, shared queries,
+    # admission rejects, delivered/dropped results, replicas (the
+    # Monitor's copy of FrontDoor.stats(); empty without a front door)
+    out["serve"] = snap["serve_stats"]
     out["plan_cache"] = dict(bd.planner.plan_cache.stats(),
                              capacity=cfg.cache_size,
                              max_age_seconds=cfg.cache_max_age_seconds)
@@ -141,7 +145,9 @@ def main() -> None:
     ap.add_argument("command",
                     choices=("status", "demo-status", "streams",
                              "rebalance", "joins", "trace", "metrics",
-                             "recover"))
+                             "recover", "serve"))
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="synthetic tenants for the serve demo")
     ap.add_argument("--ticks", type=int, default=8,
                     help="feed batches for the streams/rebalance/trace/"
                          "metrics commands")
@@ -188,10 +194,11 @@ def main() -> None:
         # key distribution goes lopsided; the rebalance hook moves a
         # shard off the hot StreamEngine while a standing query runs
         import numpy as np
-        bd.register_stream("streamstore0", "vitals.stream",
-                           ("patient", "hr"), capacity=4096,
-                           shards=args.shards, shard_key="patient",
-                           num_engines=args.stream_engines)
+        from repro.stream.spec import Sharding, StreamSpec
+        bd.register_stream("streamstore0", StreamSpec(
+            "vitals.stream", ("patient", "hr"), capacity=4096,
+            sharding=Sharding(shards=args.shards, shard_key="patient",
+                              num_engines=args.stream_engines)))
         bd.register_continuous(
             "bdstream(aggregate(window(vitals.stream, 64), avg(hr)))",
             every_n_ticks=1, name="hr_avg")
@@ -277,11 +284,13 @@ def main() -> None:
         import tempfile
         import numpy as np
         from repro.stream.durability import fingerprint
+        from repro.stream.spec import Durability, Sharding, StreamSpec
         wal_dir = args.dir or tempfile.mkdtemp(prefix="bigdawg_wal_")
-        stream = bd.register_stream(
-            "streamstore0", "vitals.stream", ("patient", "hr"),
-            capacity=4096, shards=2, durability=wal_dir,
-            checkpoint_every_rows=256)
+        stream = bd.register_stream("streamstore0", StreamSpec(
+            "vitals.stream", ("patient", "hr"), capacity=4096,
+            sharding=Sharding(shards=2),
+            durability=Durability(wal_dir,
+                                  checkpoint_every_rows=256)))
         rng = np.random.default_rng(0)
         for _ in range(args.ticks):
             stream.append({
@@ -308,6 +317,44 @@ def main() -> None:
             "replay": {k: v[0] for k, v in
                        replay_stats.columns.items()},
         }, indent=1, default=float))
+        return
+    elif args.command == "serve":
+        # serving front-door demo: N synthetic tenants share one
+        # standing window-average over a spec-registered stream; the
+        # middle tenant also gets a private cadence-2 query.  Prints
+        # the serve health block admin.status() renders.
+        import numpy as np
+        from repro.serve.engine import ServeConfig
+        from repro.serve.frontdoor import FrontDoor
+        from repro.stream.spec import StreamSpec
+        door = FrontDoor(bd, ServeConfig(streams=(
+            StreamSpec("vitals.stream", ("ts", "hr"),
+                       capacity=4096),)),
+            stream_engine="streamstore0",
+            max_tenants=max(1, args.tenants))
+        shared_q = ("bdstream(aggregate(window(vitals.stream, 64),"
+                    " avg(hr)))")
+        subs = []
+        for i in range(max(1, args.tenants)):
+            session = door.open_session(f"tenant{i}")
+            subs.append(session.subscribe(shared_q))
+            if i == args.tenants // 2:
+                session.subscribe(
+                    "bdstream(rate(vitals.stream))", every_n_ticks=2)
+        rng = np.random.default_rng(0)
+        stream = bd.engines["streamstore0"].get("vitals.stream")
+        for t in range(args.ticks):
+            stream.append({"ts": np.arange(64.) + 64 * t,
+                           "hr": 75 + rng.standard_normal(64)})
+            bd.streams.tick()
+        delivered = [len(s.poll()) for s in subs]
+        st = status(bd)
+        print(json.dumps({
+            "serve": st["serve"],
+            "delivered_per_tenant": delivered,
+            "standing_queries": sorted(st["streams"]["queries"]),
+        }, indent=1))
+        door.close()
         return
     elif args.command == "metrics":
         # run the streams demo, then dump the process-wide registry in

@@ -6,6 +6,7 @@ v0.1 release (catalog + data engines + middleware).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional
 
 from repro.core.catalog import Catalog
@@ -100,7 +101,7 @@ class BigDawg:
         return sorted(stream_engines,
                       key=lambda e: int(e[len("streamstore"):]))
 
-    def register_stream(self, engine_name: str, name: str, fields,
+    def register_stream(self, engine_name: str, name=None, fields=None,
                         capacity: int = 4096, shards: int = 1,
                         shard_key: Optional[str] = None,
                         num_engines: Optional[int] = None,
@@ -110,84 +111,98 @@ class BigDawg:
                         idle_timeout: Optional[float] = None,
                         durability: Optional[str] = None,
                         checkpoint_every_rows: Optional[int] = None,
-                        dead_letter: bool = False):
+                        dead_letter: bool = False, *, spec=None):
         """Create a ring-buffer stream and register it in the catalog (so
         the Planner can place streaming nodes).
 
-        ``shards=1``: one ``Stream`` on ``engine_name`` (existing
-        behavior).  ``shards>1``: the logical stream is hash-partitioned
-        into ``shards`` ring buffers spread round-robin over
-        ``num_engines`` StreamEngines (default: one engine per shard,
-        auto-added via ``ensure_stream_engines``); the returned
-        ``ShardedStream`` handle is registered on every participating
-        engine, so BQL ops stay shard-transparent.  ``capacity`` is the
-        logical total, split evenly across shards.  ``shard_key`` hashes
-        rows by that field's value instead of round-robin seq blocks.
+        Primary form — a declarative spec (see ``repro.stream.spec``):
 
-        ``ts_field`` declares one of ``fields`` as the event-time axis:
-        the stream then accepts out-of-order ingest bounded by
-        ``max_delay`` (rows park in an insertion buffer until the low
-        watermark passes them; later arrivals are dropped as late) and
-        answers ``ewindow``/``join`` BQL ops.  Without it, semantics are
-        exactly the append-ordered streams of before.
+            bd.register_stream("streamstore0", StreamSpec(
+                "icu.abp", ("ts", "abp"), capacity=512,
+                sharding=Sharding(shards=2),
+                event_time=EventTime("ts", max_delay=4.0)))
 
-        ``idle_timeout`` (seconds, event-time streams) is automatic
-        punctuation: a key-hashed shard whose key range goes quiet for
-        that long stops holding the min-watermark back, and a stream
-        with no arrivals at all flushes out entirely —
-        ``StreamRuntime.tick`` drives the advance, so standing queries
-        over one quiet key range unstick without a manual ``flush()``.
+        The ``StreamSpec`` groups what used to be 13 keywords into
+        ``Sharding`` / ``EventTime`` / ``Durability`` sub-configs; the
+        registered handle keeps it as ``stream.spec`` and the
+        durability manifest persists it, so ``recover_stream`` hands
+        the same spec back.  The semantics of every knob are documented
+        on the sub-configs.
 
-        Concurrent producers are first-class: ``stream.producer()``
-        hands out per-producer append handles, appends reserve seq
-        blocks instead of serializing on a coordinator lock, and
-        ``stream.ingest_concurrency()`` (also in
-        ``admin.status()["streams"]``) reports the contention counters.
-
-        ``durability=<dir>`` makes the stream crash-safe: committed
-        batches are logged write-behind to a per-shard segment log
-        under ``<dir>`` and the full state checkpoints every
-        ``checkpoint_every_rows`` logged rows (driven by
-        ``streams.tick()``; ``None`` = explicit checkpoints only).
-        ``recover_stream`` rebuilds it after a crash.  ``dead_letter``
-        diverts late event-time rows into a queryable ``{name}.__late``
-        stream (recorded in the log, so replay preserves them) instead
-        of only counting them.  See docs/OPERATIONS.md "Durability &
-        replay".
+        Legacy form — ``register_stream(engine, name, fields,
+        **kwargs)`` — still works: it folds the kwargs into the
+        identical spec (bit-identical streams) but emits a
+        ``DeprecationWarning``.  New knobs go on the spec's
+        sub-configs, never on this shim — ``tools/check_api_freeze.py``
+        pins the shim's signature in CI.
         """
+        from repro.stream.spec import StreamSpec
+        if isinstance(name, StreamSpec):
+            if spec is not None:
+                raise TypeError("pass the StreamSpec positionally or "
+                                "via spec=, not both")
+            spec, name = name, None
+        if spec is None:
+            warnings.warn(
+                "register_stream(engine, name, fields, **kwargs) is "
+                "deprecated; build a repro.stream.spec.StreamSpec and "
+                "call register_stream(engine, spec)",
+                DeprecationWarning, stacklevel=2)
+            spec = StreamSpec.from_kwargs(
+                name, fields, capacity=capacity, shards=shards,
+                shard_key=shard_key, num_engines=num_engines,
+                rolling=rolling, block_rows=block_rows,
+                ts_field=ts_field, max_delay=max_delay,
+                idle_timeout=idle_timeout, durability=durability,
+                checkpoint_every_rows=checkpoint_every_rows,
+                dead_letter=dead_letter)
+        elif name is not None or fields is not None:
+            raise TypeError("pass either a StreamSpec or the legacy "
+                            "name/fields/kwargs, not both")
+        return self._register_spec(engine_name, spec)
+
+    def _register_spec(self, engine_name: str, spec):
+        """The one registration path (both API forms land here)."""
         from repro.stream.engine import (SEQ_FIELD, ShardedStream, Stream,
                                          StreamEngine)
         assert isinstance(self.engines[engine_name], StreamEngine), \
             engine_name
-        if shards <= 1:
-            stream = Stream(name, fields, capacity, rolling=rolling,
-                            ts_field=ts_field, max_delay=max_delay,
-                            idle_timeout=idle_timeout)
+        name, fields = spec.name, spec.fields
+        et = spec.event_time
+        if spec.shards <= 1:
+            stream = Stream(name, fields, spec.capacity,
+                            rolling=spec.rolling, ts_field=spec.ts_field,
+                            max_delay=et.max_delay if et else 0.0,
+                            idle_timeout=et.idle_timeout if et else None)
+            stream.spec = spec
             self.register_object(engine_name, name, stream,
                                  fields=tuple(fields))
-            self._stream_extras(engine_name, stream, capacity,
-                                durability, checkpoint_every_rows,
-                                dead_letter)
+            self._stream_extras(engine_name, stream, spec)
             return stream
-        spread = num_engines or shards
+        sh = spec.sharding
         # ensure_stream_engines returns the whole (possibly larger)
         # streaming island; spread the shards over only the first
-        # `spread` engines so the documented num_engines contract holds
-        engine_names = self.ensure_stream_engines(spread)[:spread]
-        per_shard = max(1, -(-int(capacity) // shards))      # ceil div
+        # `num_engines` engines so the documented contract holds
+        engine_names = self.ensure_stream_engines(
+            sh.num_engines)[:sh.num_engines]
+        per_shard = max(1, -(-int(spec.capacity) // sh.shards))  # ceil
         pairs = []
-        for i in range(shards):
+        for i in range(sh.shards):
             ename = engine_names[i % len(engine_names)]
             shard = Stream(f"{name}@shard{i}",
                            tuple(fields) + (SEQ_FIELD,),
-                           per_shard, rolling=rolling)
+                           per_shard, rolling=spec.rolling)
             self.register_object(ename, shard.name, shard,
                                  fields=shard.fields)
             pairs.append((ename, shard))
-        handle = ShardedStream(name, fields, pairs, shard_key=shard_key,
-                               block_rows=block_rows, ts_field=ts_field,
-                               max_delay=max_delay,
-                               idle_timeout=idle_timeout)
+        handle = ShardedStream(name, fields, pairs,
+                               shard_key=sh.shard_key,
+                               block_rows=sh.block_rows,
+                               ts_field=spec.ts_field,
+                               max_delay=et.max_delay if et else 0.0,
+                               idle_timeout=et.idle_timeout if et
+                               else None)
+        handle.spec = spec
         # the handle lives on every participating engine AND the caller's
         # anchor engine (shards always spread over streamstore0..spread-1,
         # but engine_name must still resolve the logical stream)
@@ -196,29 +211,29 @@ class BigDawg:
                              fields=tuple(fields))
         for ename in participating[1:]:
             self.engines[ename].put(name, handle)
-        self._stream_extras(engine_name, handle, capacity, durability,
-                            checkpoint_every_rows, dead_letter)
+        self._stream_extras(engine_name, handle, spec)
         return handle
 
-    def _stream_extras(self, engine_name: str, stream, capacity: int,
-                       durability: Optional[str],
-                       checkpoint_every_rows: Optional[int],
-                       dead_letter: bool) -> None:
+    def _stream_extras(self, engine_name: str, stream, spec) -> None:
         """Shared tail of register_stream/recover_stream: dead-letter
         sink registration and the durability attach (sink first — the
         durability meta must record it)."""
         from repro.stream.engine import Stream
+        dead_letter = (spec.event_time is not None
+                       and spec.event_time.dead_letter)
         if dead_letter and stream._late_sink is None:
             stream._late_sink = Stream(f"{stream.name}.__late",
-                                       stream.fields, capacity)
+                                       stream.fields, spec.capacity)
         if stream._late_sink is not None:
             self.register_object(engine_name, stream._late_sink.name,
                                  stream._late_sink,
                                  fields=tuple(stream.fields))
-        if durability is not None:
+        if spec.durability is not None:
             from repro.stream.durability import attach
-            attach(stream, durability,
-                   checkpoint_every_rows=checkpoint_every_rows)
+            attach(stream, spec.durability.directory,
+                   checkpoint_every_rows=spec.durability
+                   .checkpoint_every_rows,
+                   keep=spec.durability.keep)
             self.streams.register_durable(stream)
 
     def recover_stream(self, engine_name: str, directory: str):
@@ -227,8 +242,12 @@ class BigDawg:
         it — shard rings on their original engines, the handle on every
         participating engine, the dead-letter sink if any — and
         re-attach durability so ingest continues into the same log.
-        Returns the recovered stream; the house invariant is that it is
-        bit-identical to the crashed one's durable prefix."""
+        Returns the recovered stream with its registration spec
+        round-tripped from the manifest (``stream.spec`` — the same
+        ``StreamSpec`` the stream was registered with, so recovery
+        never requires the caller to restate registration kwargs); the
+        house invariant is that the stream is bit-identical to the
+        crashed one's durable prefix."""
         from repro.stream.durability import recover
         result = recover(directory)
         stream = result.stream
@@ -257,13 +276,16 @@ class BigDawg:
                                  fields=tuple(stream.fields))
         import json as _json
         import os as _os
+        from repro.stream.spec import StreamSpec
         with open(_os.path.join(directory, "meta.json")) as f:
-            knobs = _json.load(f)
+            manifest = _json.load(f)
+        spec = StreamSpec.from_manifest(manifest, directory)
+        stream.spec = spec
         from repro.stream.durability import attach
         durable = attach(stream, directory,
-                         checkpoint_every_rows=knobs.get(
-                             "checkpoint_every_rows"),
-                         keep=knobs.get("keep", 3))
+                         checkpoint_every_rows=spec.durability
+                         .checkpoint_every_rows,
+                         keep=spec.durability.keep)
         durable.recovered += 1
         durable.last_recovery = {
             "checkpoint_step": meta.checkpoint_step,

@@ -17,8 +17,15 @@ Routes:
            counted) is deep-copied onto the destination and the source
            copy deleted, so a shard can be rebalanced under a running
            standing query without losing continuity.  Unlike the other
-           routes this one moves rather than copies — two live replicas
-           of one append-ordered buffer would fork the seq space.
+           routes this one moves rather than copies by default — two
+           *writable* replicas of one append-ordered buffer would fork
+           the seq space.  ``MigrationParams(copy=True)`` instead
+           builds a **read replica**: the source stays live and the
+           destination gets a detached, renamed deep copy for fan-out
+           reads (the serving front door's hot-read path); a durable
+           source's replica carries the segment-log positions captured
+           at the copy instant, so ``durability.catch_up`` can replay
+           it forward incrementally without a seq fork.
 
 On a TPU mesh the binary route between DenseHBM shardings is a resharding
 collective (device_put to a new NamedSharding) — no host round-trip; the
@@ -49,6 +56,7 @@ class MigrationParams:
     method: Optional[str] = None        # None -> negotiate from catalog
     dest_schema: str = ""
     quant_block: int = 128
+    copy: bool = False                  # stream route: replica, not move
 
 
 @dataclasses.dataclass
@@ -110,7 +118,7 @@ class Migrator:
                                     object_to, params)
             elif method == "stream":
                 self._stream_migrate(engine_from, object_from, engine_to,
-                                     object_to)
+                                     object_to, copy=params.copy)
             else:
                 raise MigrationException(f"unknown cast method {method!r}")
             t2 = time.perf_counter()
@@ -150,9 +158,11 @@ class Migrator:
         return "binary"
 
     def _stream_migrate(self, engine_from: Engine, object_from: str,
-                        engine_to: Engine, object_to: str) -> None:
+                        engine_to: Engine, object_to: str,
+                        copy: bool = False) -> None:
         """Move a live ring buffer between StreamEngines (see module
-        docstring: this route moves, the others copy).
+        docstring: this route moves by default; ``copy=True`` builds a
+        detached read replica instead and leaves the source live).
 
         Shard moves are safe under concurrent producers:
         ``ShardedStream.migrate_shard`` pauses the shard's ordered
@@ -164,22 +174,39 @@ class Migrator:
         still needs external serialization: a block reserved after the
         export but before the delete below lands in the doomed source
         object (pause the feed, or move between ticks)."""
-        from repro.stream.engine import Stream, StreamEngine
+        from repro.stream.engine import (ShardedStream, Stream,
+                                         StreamEngine)
         obj = engine_from.get(object_from)
-        if not isinstance(obj, Stream):
+        allowed = (Stream, ShardedStream) if copy else (Stream,)
+        if not isinstance(obj, allowed):
             raise MigrationException(
-                f"stream cast needs a Stream source, got "
-                f"{type(obj).__name__} for {object_from!r}")
+                f"stream cast needs a "
+                f"{' or '.join(c.__name__ for c in allowed)} source, "
+                f"got {type(obj).__name__} for {object_from!r}")
         if not isinstance(engine_to, StreamEngine):
             raise MigrationException(
                 f"stream cast needs a StreamEngine destination, "
                 f"{engine_to.name} is {engine_to.kind}")
         if engine_to is engine_from and object_to == object_from:
-            # the stream route moves (put + delete source); a self-move
-            # would delete the freshly imported copy and lose the buffer
+            # moving: put + delete source would delete the freshly
+            # imported copy; copying: put would overwrite the primary
             raise MigrationException(
-                f"stream cast cannot move {object_from!r} onto itself "
-                f"on {engine_from.name}")
+                f"stream cast cannot {'copy' if copy else 'move'} "
+                f"{object_from!r} onto itself on {engine_from.name}")
+        if copy:
+            durable = getattr(obj, "_durable", None)
+            if durable is not None:
+                # capture (state, per-lane log positions) at one
+                # coherent instant so durability.catch_up can replay
+                # the replica forward from exactly where the copy ends
+                state, lsns = obj._checkpoint_snapshot(
+                    durable.lane_lsns)
+                replica = obj.clone(object_to, state=state)
+                replica._replica_lsns = lsns
+            else:
+                replica = obj.clone(object_to)
+            engine_to.put(object_to, replica)
+            return
         state = obj.export_state()
         engine_to.put(object_to, Stream.from_state(state))
         engine_from.delete(object_from)

@@ -79,6 +79,10 @@ class Monitor:
         # and the last recover_stream outcome
         self.durability_stats: Dict[str, Dict[str, Any]] = {}
         self.recoveries: Dict[str, Dict[str, Any]] = {}
+        # serving front-door health (repro.serve.frontdoor feeds this:
+        # tenants, subscriptions, shared queries, admission rejects,
+        # delivered/dropped results, replica counts)
+        self.serve_stats: Dict[str, Any] = {}
 
     # -- benchmark API (paper naming) ----------------------------------------
     def add_benchmarks(self, signature: Signature, lean: bool,
@@ -256,6 +260,25 @@ class Monitor:
         metrics.gauge("repro_stream_pending_rows",
                       "insertion-buffer rows above the watermark",
                       stream=stream_name).set(int(pending))
+
+    def observe_serve(self, stats: Dict[str, Any]) -> None:
+        """Record the serving front door's health block (one per
+        process — the front door is a singleton tier over the
+        deployment, like the jit stats)."""
+        with self._lock:
+            self.serve_stats = dict(stats)
+        for key in ("tenants", "subscriptions", "shared_queries",
+                    "replicas"):
+            if key in stats:
+                metrics.gauge(f"repro_serve_{key}",
+                              f"serving front door: {key}").set(
+                    stats[key])
+        for key in ("admission_rejects", "results_delivered",
+                    "results_dropped"):
+            if key in stats:
+                metrics.counter(
+                    f"repro_serve_{key}_total",
+                    f"serving front door: {key}").set_total(stats[key])
 
     def observe_ingest(self, stream_name: str,
                        stats: Dict[str, int]) -> None:
@@ -436,6 +459,7 @@ class Monitor:
                 "durability_stats": {
                     k: dict(v)
                     for k, v in self.durability_stats.items()},
+                "serve_stats": dict(self.serve_stats),
                 "recoveries": {k: dict(v)
                                for k, v in self.recoveries.items()},
                 "shard_stats": {

@@ -8,9 +8,10 @@ requests are padded into waves by the scheduler.
 """
 from __future__ import annotations
 
+import atexit
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +20,7 @@ import numpy as np
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.obs import metrics, trace
+from repro.stream.spec import StreamSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +37,14 @@ class ServeConfig:
     # (0 = don't; the registry is process-wide, so any port exposes
     # every subsystem's series, not just serving)
     metrics_port: Optional[int] = None
+    # polystore streams this serving tier provisions at startup — the
+    # same declarative StreamSpec values register_stream/recover_stream
+    # speak (the FrontDoor registers each on open(); specs are frozen,
+    # so the whole config stays hashable)
+    streams: Tuple[StreamSpec, ...] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "streams", tuple(self.streams))
 
 
 @dataclasses.dataclass
@@ -140,9 +150,14 @@ class Scheduler:
         self.queue: List[Request] = []
         self.completed: List[Completion] = []
         self._metrics_server = None
+        self._closed = False
         port = session.scfg.metrics_port
         if port is not None:
             self._metrics_server = metrics.start_http_server(port)
+            # the /metrics listener is a non-daemon resource holding a
+            # socket: guarantee it is torn down at interpreter exit even
+            # when the caller forgets close()
+            atexit.register(self.close)
 
     def submit(self, request: Request) -> None:
         self.queue.append(request)
@@ -167,7 +182,15 @@ class Scheduler:
         return self.completed
 
     def close(self) -> None:
-        """Shut down the /metrics endpoint (no-op without one)."""
+        """Shut down the /metrics endpoint.  Idempotent: safe to call
+        any number of times, from user code and from the atexit hook
+        (double shutdown of a ThreadingHTTPServer deadlocks — the
+        ``_closed`` latch makes every call after the first a no-op)."""
+        if self._closed:
+            return
+        self._closed = True
         if self._metrics_server is not None:
             self._metrics_server.shutdown()
+            self._metrics_server.server_close()   # release the socket
             self._metrics_server = None
+            atexit.unregister(self.close)

@@ -116,6 +116,10 @@ class SegmentLog:
     # -- file plumbing ---------------------------------------------------------
     def _segments(self) -> List[Tuple[int, str]]:
         out = []
+        if not os.path.isdir(self.directory):
+            # the WAL was pruned/removed out from under a closed handle;
+            # readers (Monitor stats) must see "empty", not crash a tick
+            return out
         for name in os.listdir(self.directory):
             if name.startswith("seg_") and name.endswith(".log"):
                 out.append((int(name[4:-4]),
@@ -370,13 +374,21 @@ class StreamDurability:
                 "checkpoint_every_rows": self.checkpoint_every_rows,
                 "dead_letter": s._late_sink is not None}
         if self.sharded:
+            # record the *logical* registration capacity too: per-shard
+            # capacities are a ceil-division of it, so summing them back
+            # would inflate the figure and break the StreamSpec
+            # manifest round-trip (spec ≡ from_manifest(meta))
+            spec = getattr(s, "spec", None)
             meta.update(kind="sharded",
                         shard_key=s.shard_key,
                         block_rows=s.block_rows,
                         engines=s.shard_engines(),
                         shard_capacities=[sh.capacity
                                           for sh in s._shards],
-                        rolling=s._shards[0].rolling)
+                        rolling=s._shards[0].rolling,
+                        capacity=(spec.capacity if spec is not None
+                                  else sum(sh.capacity
+                                           for sh in s._shards)))
         else:
             meta.update(kind="stream", capacity=s.capacity,
                         rolling=s.rolling)
@@ -809,6 +821,90 @@ def fingerprint(stream) -> Dict[str, Any]:
     if stream._late_sink is not None:
         out["late_sink"] = ring_digest(stream._late_sink)
     return out
+
+
+# -- replica catch-up ---------------------------------------------------------
+
+def catch_up(replica, durable: StreamDurability) -> Dict[str, Any]:
+    """Bring a read replica (Migrator stream-route *copy* mode) up to
+    date with its primary by replaying the primary's live segment log
+    from the per-lane positions stored on the replica at copy time
+    (``replica._replica_lsns``, captured inside
+    ``_checkpoint_snapshot`` so state and log position agree exactly).
+
+    Read-only against the log (``repair=False`` — a concurrent
+    writer's half-flushed tail is skipped, never cut) and incremental:
+    the replica's lane floors advance past every applied record, so
+    repeated calls replay only the delta.  For seq-sharded primaries a
+    block is applied only once every shard slice of it has been
+    logged; an incomplete tail block stays pending until the next
+    call."""
+    t0 = time.perf_counter()
+    floors: Dict[str, int] = dict(
+        getattr(replica, "_replica_lsns", None) or {})
+    with trace.span("stream/catch_up", stream=replica.name):
+        records = {lane: log.scan(floors.get(lane, 0), repair=False)
+                   for lane, log in durable.lanes.items()}
+        if (isinstance(replica, ShardedStream)
+                and replica.ts_field is None):
+            replayed, rows, applied = _catch_up_sharded(replica,
+                                                        records)
+        else:
+            recs = records["lane0"]
+            replayed, rows, _ = _replay_single(replica, recs)
+            applied = {"lane0": (recs[replayed - 1].lsn + 1
+                                 if replayed else None)}
+    for lane in durable.lanes:
+        if applied.get(lane) is not None:
+            floors[lane] = max(floors.get(lane, 0), applied[lane])
+        else:
+            floors.setdefault(lane, 0)
+    replica._replica_lsns = floors
+    metrics.counter("repro_stream_replica_catchup_rows_total",
+                    "rows applied to read replicas from the primary's "
+                    "segment log",
+                    stream=replica.name).inc(rows)
+    return {"records": replayed, "rows": rows,
+            "seconds": time.perf_counter() - t0, "lsns": dict(floors)}
+
+
+def _catch_up_sharded(stream: ShardedStream,
+                      records: Dict[str, List[Record]]
+                      ) -> Tuple[int, int, Dict[str, Optional[int]]]:
+    """The incremental (non-repairing) sibling of ``_replay_sharded``:
+    apply complete blocks in contiguous seq order from the replica's
+    frontier, and report per-lane the first *unapplied* lsn (the next
+    catch-up floor) — ``None`` when the lane had no records to scan."""
+    blocks: Dict[int, Dict[str, Any]] = {}
+    for lane, recs in records.items():
+        shard = int(lane[len("shard"):])
+        for rec in recs:
+            entry = blocks.setdefault(rec.block,
+                                      {"total": rec.total, "parts": []})
+            entry["parts"].append((shard, rec))
+    replayed = rows = 0
+    frontier = stream.total_appended
+    while frontier in blocks:
+        entry = blocks[frontier]
+        total = entry["total"]
+        if sum(r.nrows for _, r in entry["parts"]) != total:
+            break                      # incomplete tail block: wait
+        for shard, rec in sorted(entry["parts"]):
+            _apply_plain(stream._shards[shard], rec.cols, rec.nrows)
+            replayed += 1
+            rows += rec.nrows
+        with stream._frontier:
+            stream.total_appended += total
+        stream.reserved = stream.total_appended
+        stream.blocks_reserved += 1
+        stream.rows_reserved += total
+        frontier = stream.total_appended
+    applied: Dict[str, Optional[int]] = {}
+    for lane, recs in records.items():
+        pending = [r.lsn for r in recs if r.block >= frontier]
+        applied[lane] = (pending[0] if pending
+                         else (recs[-1].lsn + 1 if recs else None))
+    return replayed, rows, applied
 
 
 # -- replay-as-loadgen --------------------------------------------------------

@@ -545,6 +545,10 @@ class Stream(_MultiProducerIngest):
         # check per batch and nothing else.
         self._durable = None
         self._late_sink: Optional["Stream"] = None
+        # registration spec (repro.stream.spec.StreamSpec), set by
+        # BigDawg._register_spec / recover_stream; None when the stream
+        # was built directly
+        self.spec = None
 
     # -- ingest ---------------------------------------------------------------
     def append(self, rows: Dict[str, Iterable[float]]) -> Dict[str, int]:
@@ -1067,6 +1071,20 @@ class Stream(_MultiProducerIngest):
             "rows_reserved", stream.total_appended))
         return stream
 
+    def clone(self, name: Optional[str] = None,
+              state: Optional[Dict[str, Any]] = None) -> "Stream":
+        """A detached deep copy of the live state, optionally renamed —
+        what the Migrator's stream-route *copy* mode (read replicas)
+        builds on.  The clone shares nothing with this stream: no
+        committer, no durability hook, no late sink.  Pass ``state``
+        (an ``export_state`` dict captured earlier, e.g. inside
+        ``_checkpoint_snapshot``) to clone that instant instead of
+        now."""
+        state = dict(self.export_state() if state is None else state)
+        if name is not None:
+            state["name"] = name
+        return Stream.from_state(state)
+
     # -- durability checkpoint hook -------------------------------------------
     def _checkpoint_snapshot(self, capture):
         """Export the full state at an instant where the ring and the
@@ -1239,6 +1257,10 @@ class ShardedStream(_MultiProducerIngest):
         # attached — the hot path pays one attribute check per batch
         self._durable = None
         self._late_sink: Optional[Stream] = None
+        # registration spec (repro.stream.spec.StreamSpec), set by
+        # BigDawg._register_spec / recover_stream; None when the handle
+        # was built directly
+        self.spec = None
 
     # -- topology -------------------------------------------------------------
     @property
@@ -2120,6 +2142,23 @@ class ShardedStream(_MultiProducerIngest):
                                           stream._shard_max_ts)]
         stream.migrations = int(state.get("migrations", 0))
         return stream
+
+    def clone(self, name: Optional[str] = None,
+              state: Optional[Dict[str, Any]] = None) -> "ShardedStream":
+        """A detached deep copy of the whole sharded state (handle +
+        every shard ring), optionally renamed — the sharded analog of
+        ``Stream.clone``.  Shard rings are renamed to match so a
+        replica's diagnostics never alias the primary's."""
+        state = dict(self.export_state() if state is None else state)
+        if name is not None:
+            state["name"] = name
+            renamed = []
+            for i, shard_state in enumerate(state["shards"]):
+                shard_state = dict(shard_state)
+                shard_state["name"] = f"{name}@shard{i}"
+                renamed.append(shard_state)
+            state["shards"] = renamed
+        return ShardedStream.from_state(state)
 
     def close(self) -> None:
         """Shut down the scatter fan-out pool.  Optional: a dropped

@@ -1,0 +1,298 @@
+"""Serving front-door tests: admission control (capacity caps + the
+Monitor-fed load circuit breaker), per-subscription backpressure, the
+house bit-identity invariant extended to the serving tier (results via
+the front door ≡ direct ``register_continuous``), plan-cache warm
+sharing across tenants, replica fan-out reads caught up from the
+segment log, and the Scheduler /metrics double-close regression."""
+import types
+
+import numpy as np
+import pytest
+
+from repro.core.api import default_deployment
+from repro.serve.engine import ServeConfig, Scheduler
+from repro.serve.frontdoor import AdmissionError, FrontDoor
+from repro.stream import durability as dur
+from repro.stream.spec import Durability, Sharding, StreamSpec
+
+AVG_Q = "bdstream(aggregate(window(fd.s, 8), avg(v)))"
+
+
+def _door(bd=None, **kwargs):
+    bd = bd or default_deployment()
+    kwargs.setdefault("stream_engine", "streamstore0")
+    cfg = kwargs.pop("config", ServeConfig(streams=(
+        StreamSpec("fd.s", ("ts", "v"), capacity=128),)))
+    return bd, FrontDoor(bd, cfg, **kwargs)
+
+
+def _feed(bd, stream, n=8, base=0.0):
+    stream.append({"ts": np.arange(float(n)) + base,
+                   "v": np.arange(float(n)) + base})
+    return bd.streams.tick()
+
+
+# -- session & subscription lifecycle -----------------------------------------
+
+def test_config_streams_are_registered_via_specs():
+    bd, door = _door()
+    stream = bd.engines["streamstore0"].get("fd.s")
+    assert stream.capacity == 128
+    assert stream.spec == door.config.streams[0]
+
+
+def test_serve_config_rejects_non_spec_streams():
+    bd = default_deployment()
+    with pytest.raises(TypeError):
+        FrontDoor(bd, ServeConfig(streams=({"name": "x"},)),
+                  stream_engine="streamstore0")
+
+
+def test_open_session_is_idempotent_per_tenant():
+    _, door = _door()
+    assert door.open_session("a") is door.open_session("a")
+    assert door.stats()["tenants"] == 1
+
+
+def test_close_session_releases_query_and_capacity():
+    bd, door = _door(max_tenants=1)
+    session = door.open_session("a")
+    session.subscribe(AVG_Q)
+    assert door.stats()["shared_queries"] == 1
+    session.close()
+    assert door.stats()["tenants"] == 0
+    assert door.stats()["shared_queries"] == 0
+    assert not bd.streams.queries          # CQ deregistered
+    door.open_session("b")                 # capacity freed
+
+
+# -- admission control --------------------------------------------------------
+
+def test_admission_rejects_over_max_tenants():
+    _, door = _door(max_tenants=2)
+    door.open_session("a")
+    door.open_session("b")
+    with pytest.raises(AdmissionError, match="max_tenants"):
+        door.open_session("c")
+    assert door.stats()["admission_rejects"] == 1
+
+
+def test_admission_rejects_over_per_tenant_queries():
+    _, door = _door(max_queries_per_tenant=1)
+    session = door.open_session("a")
+    session.subscribe(AVG_Q)
+    with pytest.raises(AdmissionError, match="max_queries_per_tenant"):
+        session.subscribe(AVG_Q, every_n_ticks=2)
+
+
+def test_load_circuit_breaker_from_monitor_drops():
+    """The breaker is fed by Monitor.stream_stats: once the standing
+    queries have visibly lost rows to ring overflow, new admissions
+    are refused until the operator re-arms."""
+    bd = default_deployment()
+    bd, door = _door(bd, config=ServeConfig(streams=(
+        StreamSpec("fd.s", ("ts", "v"), capacity=4, rolling=False),)),
+        admit_max_dropped=0)
+    session = door.open_session("a")
+    session.subscribe("bdstream(snapshot(fd.s))")
+    stream = bd.engines["streamstore0"].get("fd.s")
+    stream.append({"ts": np.arange(16.), "v": np.arange(16.)})
+    bd.streams.tick()                      # stream_stats sees the drops
+    with pytest.raises(AdmissionError, match="dropped"):
+        door.open_session("b")
+    with pytest.raises(AdmissionError, match="dropped"):
+        session.subscribe("bdstream(rate(fd.s))")
+    door.reset_admission()                 # incident over
+    door.open_session("b")
+
+
+# -- backpressure -------------------------------------------------------------
+
+def test_slow_consumer_drops_oldest_results_only():
+    bd, door = _door(result_buffer=3)
+    sub = door.open_session("a").subscribe(AVG_Q)
+    stream = bd.engines["streamstore0"].get("fd.s")
+    for i in range(5):
+        _feed(bd, stream, base=8.0 * i)
+    assert sub.pending == 3 and sub.dropped == 2
+    results = sub.poll()
+    # the *newest* three survived, in order
+    assert [tick for tick, _ in results] == [3, 4, 5]
+    assert door.stats()["results_dropped"] == 2
+    assert sub.poll() == []                # drained
+
+
+# -- bit-identity & warm sharing ----------------------------------------------
+
+def test_front_door_results_bit_identical_to_direct():
+    """The house invariant, extended: every result a tenant receives
+    through the front door is bitwise equal to what a directly
+    registered continuous query produces for the same BQL and ticks."""
+    bd, door = _door()
+    sub_a = door.open_session("a").subscribe(AVG_Q)
+    sub_b = door.open_session("b").subscribe(AVG_Q)
+    direct = bd.streams.register_continuous(AVG_Q, name="direct")
+    stream = bd.engines["streamstore0"].get("fd.s")
+    direct_values = []
+    for i in range(4):
+        ran = dict(_feed(bd, stream, base=8.0 * i))
+        direct_values.append(np.asarray(
+            next(iter(ran["direct"].value.attrs.values()))))
+    for sub in (sub_a, sub_b):
+        got = sub.poll()
+        assert len(got) == 4
+        for (tick, value), want in zip(got, direct_values):
+            have = np.asarray(next(iter(value.attrs.values())))
+            assert have.tobytes() == want.tobytes()
+
+
+def test_identical_subscriptions_share_one_execution():
+    bd, door = _door()
+    subs = [door.open_session(f"t{i}").subscribe(AVG_Q)
+            for i in range(4)]
+    assert door.stats()["shared_queries"] == 1
+    assert door.stats()["shared_attaches"] == 3
+    stream = bd.engines["streamstore0"].get("fd.s")
+    _feed(bd, stream)
+    _feed(bd, stream, base=8.0)
+    (cq,) = bd.streams.queries.values()
+    assert cq.executions == 2              # one per tick, not per tenant
+    assert cq.cache_hits >= 1              # warm plan cache after tick 1
+    assert all(len(s.poll()) == 2 for s in subs)
+    # a different cadence is a different execution
+    door.open_session("t0").subscribe(AVG_Q, every_n_ticks=2)
+    assert door.stats()["shared_queries"] == 2
+
+
+def test_close_stops_fanout_and_deregisters():
+    bd, door = _door()
+    sub = door.open_session("a").subscribe(AVG_Q)
+    stream = bd.engines["streamstore0"].get("fd.s")
+    _feed(bd, stream)
+    door.close()
+    door.close()                           # idempotent
+    _feed(bd, stream, base=8.0)
+    assert len(sub.poll()) == 1            # nothing delivered post-close
+    assert not bd.streams.queries
+
+
+# -- replica fan-out ----------------------------------------------------------
+
+def test_replica_copy_leaves_primary_and_serves_reads(tmp_path):
+    bd = default_deployment()
+    bd, door = _door(bd, config=ServeConfig(streams=(
+        StreamSpec("fd.s", ("ts", "v"), capacity=128,
+                   sharding=Sharding(shards=2),
+                   durability=Durability(str(tmp_path))),)))
+    stream = bd.engines["streamstore0"].get("fd.s")
+    stream.append({"ts": np.arange(16.), "v": np.arange(16.)})
+    (rname,) = door.replicate("fd.s", n=1)
+    assert rname == "fd.s.replica0"
+    assert bd.engines["streamstore0"].get("fd.s") is stream
+    # replica serves the window read, bit-identical to the primary
+    session = door.open_session("a")
+    got = session.read("fd.s", 4)
+    want = stream.window(4)
+    assert np.asarray(got.attrs["v"]).tobytes() == \
+        np.asarray(want.attrs["v"]).tobytes()
+
+
+def test_replica_catch_up_from_segment_log(tmp_path):
+    bd = default_deployment()
+    bd, door = _door(bd, config=ServeConfig(streams=(
+        StreamSpec("fd.s", ("ts", "v"), capacity=256,
+                   sharding=Sharding(shards=2, block_rows=8),
+                   durability=Durability(str(tmp_path))),)))
+    primary = bd.engines["streamstore0"].get("fd.s")
+    primary.append({"ts": np.arange(24.), "v": np.arange(24.)})
+    door.replicate("fd.s", n=2)
+    # primary moves on; replicas are stale until refreshed
+    primary.append({"ts": np.arange(24., 48.), "v": np.arange(24., 48.)})
+    rows = door.refresh_replicas("fd.s")
+    assert set(rows) == {"fd.s.replica0", "fd.s.replica1"}
+    assert all(n == 24 for n in rows.values())
+
+    def denamed(fp):
+        fp = dict(fp)
+        fp.pop("name", None)
+        if "shards" in fp:
+            fp["shards"] = [dict(d, name=None) for d in fp["shards"]]
+        return fp
+
+    want = denamed(dur.fingerprint(primary))
+    for i in range(2):
+        replica = None
+        for ename, engine in bd.engines.items():
+            from repro.stream.engine import StreamEngine
+            if isinstance(engine, StreamEngine) \
+                    and engine.has(f"fd.s.replica{i}"):
+                replica = engine.get(f"fd.s.replica{i}")
+        assert denamed(dur.fingerprint(replica)) == want
+    # refresh again: incremental, nothing to replay
+    assert all(n == 0 for n in door.refresh_replicas("fd.s").values())
+
+
+def test_refresh_replicas_requires_durability():
+    bd, door = _door()
+    stream = bd.engines["streamstore0"].get("fd.s")
+    stream.append({"ts": np.arange(8.), "v": np.arange(8.)})
+    door.replicate("fd.s", n=1)
+    with pytest.raises(AdmissionError, match="durability"):
+        door.refresh_replicas("fd.s")
+
+
+# -- serve stats surfacing ----------------------------------------------------
+
+def test_serve_stats_flow_to_monitor_and_admin_status():
+    from repro.core import admin
+    bd, door = _door()
+    door.open_session("a").subscribe(AVG_Q)
+    stream = bd.engines["streamstore0"].get("fd.s")
+    _feed(bd, stream)
+    snap = bd.monitor.snapshot()["serve_stats"]
+    assert snap["tenants"] == 1 and snap["results_delivered"] == 1
+    st = admin.status(bd)
+    assert st["serve"]["subscriptions"] == 1
+    assert st["serve"]["p99_tick_ms"] >= 0.0
+
+
+# -- Scheduler close: idempotent + atexit -------------------------------------
+
+def test_scheduler_close_is_idempotent_and_releases_port():
+    import socket
+
+    sock = socket.socket()
+    sock.bind(("127.0.0.1", 0))
+    port = sock.getsockname()[1]
+    sock.close()
+    session = types.SimpleNamespace(
+        scfg=ServeConfig(metrics_port=port))
+    sched = Scheduler(session)
+    assert sched._metrics_server is not None
+    sched.close()
+    sched.close()                          # the regression: second close
+    sched.close()                          # must be a no-op, not a hang
+    assert sched._metrics_server is None
+    # socket actually released: we can bind the port again immediately
+    probe = socket.socket()
+    probe.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    probe.bind(("127.0.0.1", port))
+    probe.close()
+
+
+def test_scheduler_close_unregisters_atexit_hook():
+    import atexit
+
+    session = types.SimpleNamespace(scfg=ServeConfig(metrics_port=0))
+    # metrics_port=0 binds an ephemeral port (start_http_server treats
+    # 0 as "any"); a Scheduler without a port registers no hook
+    none_session = types.SimpleNamespace(
+        scfg=ServeConfig(metrics_port=None))
+    sched_none = Scheduler(none_session)
+    sched_none.close()                     # idempotent without a server
+    sched_none.close()
+    sched = Scheduler(session)
+    sched.close()
+    # re-registering after close must not resurrect the old server
+    assert sched._metrics_server is None
+    atexit.unregister(sched.close)         # harmless either way

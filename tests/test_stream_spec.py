@@ -1,0 +1,264 @@
+"""StreamSpec API redesign tests: spec <-> legacy-kwargs equivalence
+(hypothesis over the config space), the deprecation shim's parity with
+the spec path (bit-identical streams), the durability manifest
+round-trip (``recover_stream`` hands the registration spec back), and
+the frozen-shim guarantee ``tools/check_api_freeze.py`` enforces in
+CI."""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.api import default_deployment
+from repro.stream import durability as dur
+from repro.stream.spec import (LEGACY_KWARGS, Durability, EventTime,
+                               Sharding, StreamSpec)
+
+
+# -- spec construction & validation -------------------------------------------
+
+def test_spec_is_frozen_and_hashable():
+    spec = StreamSpec("s", ("ts", "v"), capacity=64,
+                      sharding=Sharding(shards=2),
+                      event_time=EventTime("ts", max_delay=1.0))
+    with pytest.raises(Exception):
+        spec.capacity = 1
+    assert spec == StreamSpec("s", ["ts", "v"], capacity=64,
+                              sharding=Sharding(shards=2),
+                              event_time=EventTime("ts", max_delay=1.0))
+    assert len({spec, spec}) == 1        # usable as a dict/config key
+
+
+@pytest.mark.parametrize("bad", [
+    lambda: StreamSpec("", ("v",)),
+    lambda: StreamSpec("s", ()),
+    lambda: StreamSpec("s", ("v",), capacity=0),
+    lambda: StreamSpec("s", ("v",), event_time=EventTime("ts")),
+    lambda: StreamSpec("s", ("v",),
+                       sharding=Sharding(shards=2, shard_key="k")),
+    lambda: Sharding(shards=1),
+    lambda: Sharding(shards=2, num_engines=3),
+    lambda: Sharding(shards=2, block_rows=0),
+    lambda: EventTime(""),
+    lambda: EventTime("ts", max_delay=-1.0),
+    lambda: EventTime("ts", idle_timeout=0.0),
+    lambda: Durability(""),
+    lambda: Durability("d", checkpoint_every_rows=0),
+    lambda: Durability("d", keep=0),
+])
+def test_spec_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        bad()
+
+
+def test_dead_letter_requires_event_time():
+    with pytest.raises(ValueError):
+        StreamSpec.from_kwargs("s", ("v",), dead_letter=True)
+
+
+def test_num_engines_normalizes_to_shards():
+    assert Sharding(shards=3) == Sharding(shards=3, num_engines=3)
+
+
+# -- spec <-> kwargs equivalence ----------------------------------------------
+
+def test_kwargs_round_trip_plain_and_full():
+    for spec in (
+            StreamSpec("a", ("v",)),
+            StreamSpec("b", ("ts", "k", "v"), capacity=256,
+                       rolling=False,
+                       sharding=Sharding(shards=3, shard_key="k",
+                                         num_engines=2, block_rows=8),
+                       event_time=EventTime("ts", max_delay=2.0,
+                                            idle_timeout=0.5,
+                                            dead_letter=True),
+                       durability=Durability("/tmp/x",
+                                             checkpoint_every_rows=7))):
+        again = StreamSpec.from_kwargs(spec.name, spec.fields,
+                                       **spec.to_kwargs())
+        assert again == spec
+
+
+def test_to_kwargs_rejects_inexpressible_keep():
+    spec = StreamSpec("s", ("v",),
+                      durability=Durability("/tmp/x", keep=5))
+    with pytest.raises(ValueError):
+        spec.to_kwargs()
+
+
+def test_spec_equivalence_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")  # noqa: F841
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    shardings = st.one_of(st.none(), st.builds(
+        Sharding,
+        shards=st.integers(2, 6),
+        shard_key=st.sampled_from([None, "k"]),
+        block_rows=st.integers(1, 128)))
+    event_times = st.one_of(st.none(), st.builds(
+        EventTime,
+        ts_field=st.just("ts"),
+        max_delay=st.floats(0.0, 10.0, allow_nan=False),
+        idle_timeout=st.one_of(st.none(), st.floats(0.1, 5.0)),
+        dead_letter=st.booleans()))
+    durabilities = st.one_of(st.none(), st.builds(
+        Durability,
+        directory=st.just("/tmp/spec-prop"),
+        checkpoint_every_rows=st.one_of(st.none(),
+                                        st.integers(1, 1000))))
+
+    @settings(max_examples=60, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(capacity=st.integers(1, 1 << 16), rolling=st.booleans(),
+           sharding=shardings, event_time=event_times,
+           durability=durabilities)
+    def check(capacity, rolling, sharding, event_time, durability):
+        spec = StreamSpec("prop.s", ("ts", "k", "v"),
+                          capacity=capacity, rolling=rolling,
+                          sharding=sharding, event_time=event_time,
+                          durability=durability)
+        # every spec in the config space has an equivalent legacy
+        # kwargs spelling, and folding it back is the identity
+        assert StreamSpec.from_kwargs("prop.s", ("ts", "k", "v"),
+                                      **spec.to_kwargs()) == spec
+
+    check()
+
+
+# -- deprecation shim: warns, and stays bit-identical -------------------------
+
+def test_legacy_kwargs_emit_deprecation_warning():
+    bd = default_deployment()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        bd.register_stream("streamstore0", "w.s", ("v",), capacity=16)
+    assert any(issubclass(w.category, DeprecationWarning)
+               and "StreamSpec" in str(w.message) for w in caught)
+
+
+def test_spec_path_emits_no_warning():
+    bd = default_deployment()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        bd.register_stream("streamstore0",
+                           StreamSpec("w.t", ("v",), capacity=16))
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]
+
+
+def test_register_stream_rejects_mixed_forms():
+    bd = default_deployment()
+    spec = StreamSpec("m.s", ("v",))
+    with pytest.raises(TypeError):
+        bd.register_stream("streamstore0", spec, spec=spec)
+    with pytest.raises(TypeError):
+        bd.register_stream("streamstore0", "m.s", ("v",), spec=spec)
+
+
+@pytest.mark.parametrize("sharded", [False, True])
+def test_shim_parity_bit_identical(sharded, tmp_path):
+    """The acceptance criterion: a stream registered through the
+    legacy shim is bit-identical to one registered with the equivalent
+    spec, after identical ingest."""
+    kwargs = dict(capacity=64, ts_field="ts", max_delay=1.0,
+                  dead_letter=True,
+                  durability=str(tmp_path / "legacy"))
+    if sharded:
+        kwargs.update(shards=2, block_rows=8)
+    bd1 = default_deployment()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        s1 = bd1.register_stream("streamstore0", "p.s", ("ts", "v"),
+                                 **kwargs)
+    spec = StreamSpec.from_kwargs("p.s", ("ts", "v"), **{
+        **kwargs, "durability": str(tmp_path / "spec")})
+    bd2 = default_deployment()
+    s2 = bd2.register_stream("streamstore0", spec)
+    assert type(s1) is type(s2)
+    rng = np.random.default_rng(7)
+    for _ in range(4):
+        ts = np.cumsum(rng.random(32)) * 2.0
+        batch = {"ts": ts, "v": rng.standard_normal(32)}
+        s1.append({k: v.copy() for k, v in batch.items()})
+        s2.append(batch)
+    fp1, fp2 = dur.fingerprint(s1), dur.fingerprint(s2)
+    assert fp1 == fp2
+    # the shim also records the spec it built (same spec, modulo the
+    # two directories)
+    import dataclasses
+    assert s1.spec == dataclasses.replace(
+        spec, durability=dataclasses.replace(
+            spec.durability, directory=str(tmp_path / "legacy")))
+    assert s2.spec == spec
+
+
+# -- manifest round-trip ------------------------------------------------------
+
+@pytest.mark.parametrize("sharded", [False, True])
+def test_manifest_round_trips_spec(sharded, tmp_path):
+    bd = default_deployment()
+    sharding = Sharding(shards=3, num_engines=2,
+                        block_rows=16) if sharded else None
+    spec = StreamSpec("m.rt", ("ts", "v"), capacity=100,
+                      sharding=sharding,
+                      event_time=EventTime("ts", max_delay=1.5,
+                                           idle_timeout=2.0,
+                                           dead_letter=True),
+                      durability=Durability(str(tmp_path),
+                                            checkpoint_every_rows=32))
+    s = bd.register_stream("streamstore0", spec)
+    s.append({"ts": np.arange(8, dtype=float), "v": np.zeros(8)})
+    meta = json.loads((tmp_path / "meta.json").read_text())
+    assert StreamSpec.from_manifest(meta, str(tmp_path)) == spec
+    # without a directory the durability leg is dropped (the manifest
+    # never records where it lives)
+    assert StreamSpec.from_manifest(meta) == \
+        StreamSpec(spec.name, spec.fields, capacity=spec.capacity,
+                   rolling=spec.rolling, sharding=spec.sharding,
+                   event_time=spec.event_time)
+
+
+def test_recover_stream_returns_spec(tmp_path):
+    bd = default_deployment()
+    spec = StreamSpec("r.rt", ("ts", "v"), capacity=64,
+                      sharding=Sharding(shards=2),
+                      durability=Durability(str(tmp_path),
+                                            checkpoint_every_rows=16))
+    s = bd.register_stream("streamstore0", spec)
+    s.append({"ts": np.arange(20, dtype=float), "v": np.arange(20.)})
+    fp = dur.fingerprint(s)
+    s._durable.close()
+    bd2 = default_deployment()
+    recovered = bd2.recover_stream("streamstore0", str(tmp_path))
+    # recovery no longer requires restating registration kwargs: the
+    # spec rides the checkpoint manifest
+    assert recovered.spec == spec
+    assert dur.fingerprint(recovered) == fp
+
+
+# -- the freeze lint ----------------------------------------------------------
+
+def test_register_stream_shim_is_frozen():
+    """Tier-1 twin of tools/check_api_freeze.py: the legacy kwargs
+    surface must match spec.LEGACY_KWARGS exactly — new knobs belong
+    on the StreamSpec sub-configs."""
+    import inspect
+
+    from repro.core.api import BigDawg
+    params = [p for p in
+              inspect.signature(BigDawg.register_stream).parameters
+              if p != "self"]
+    assert params == ["engine_name", "name", "fields",
+                      *LEGACY_KWARGS, "spec"]
+
+
+def test_check_api_freeze_tool_passes():
+    import subprocess
+    import sys
+    proc = subprocess.run(
+        [sys.executable, "tools/check_api_freeze.py"],
+        capture_output=True, text=True, cwd=".",
+        env={**__import__("os").environ, "PYTHONPATH": "src"})
+    assert proc.returncode == 0, proc.stderr

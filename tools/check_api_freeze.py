@@ -1,0 +1,54 @@
+#!/usr/bin/env python
+"""CI lint: the legacy ``register_stream`` kwargs surface is FROZEN.
+
+The spec redesign (src/repro/stream/spec.py) made StreamSpec the
+primary registration form; the kwargs form survives only as a
+deprecation shim.  New registration knobs must be added as fields on
+the ``Sharding``/``EventTime``/``Durability`` sub-configs (where they
+round-trip through manifests, ServeConfig, and the front door for
+free) — never as new keyword parameters on the shim.
+
+This script pins the shim's signature to exactly
+``spec.LEGACY_KWARGS`` + ``spec`` and exits non-zero on drift, so a
+PR that grows the shim fails the lint job with an actionable message.
+
+  PYTHONPATH=src python tools/check_api_freeze.py
+"""
+import inspect
+import sys
+
+
+def main() -> int:
+    from repro.core.api import BigDawg
+    from repro.stream.spec import LEGACY_KWARGS
+
+    sig = inspect.signature(BigDawg.register_stream)
+    params = [p for p in sig.parameters if p != "self"]
+    expected = ["engine_name", "name", "fields", *LEGACY_KWARGS, "spec"]
+    if params == expected:
+        print(f"ok: register_stream signature is frozen "
+              f"({len(LEGACY_KWARGS)} legacy kwargs + spec)")
+        return 0
+    added = [p for p in params if p not in expected]
+    removed = [p for p in expected if p not in params]
+    print("register_stream's legacy shim signature drifted from "
+          "repro.stream.spec.LEGACY_KWARGS:", file=sys.stderr)
+    if added:
+        print(f"  added:   {added}\n"
+              f"  -> add new registration knobs to a StreamSpec "
+              f"sub-config (Sharding/EventTime/Durability) instead; "
+              f"the kwargs form is a frozen deprecation shim",
+              file=sys.stderr)
+    if removed:
+        print(f"  removed: {removed}\n"
+              f"  -> removing shim kwargs breaks callers; if a knob "
+              f"was intentionally retired, update LEGACY_KWARGS and "
+              f"this check's expectation together", file=sys.stderr)
+    if not added and not removed:
+        print(f"  reordered: {params}\n  expected:  {expected}",
+              file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

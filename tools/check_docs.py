@@ -48,18 +48,18 @@ def build_fixture():
     with the fixture description in docs/BQL.md)."""
     from repro.core.api import default_deployment
     from repro.data.mimic import load_mimic_demo
+    from repro.stream.spec import EventTime, Sharding, StreamSpec
 
     bd = default_deployment()
     load_mimic_demo(bd, num_patients=16, num_orders=64, wave_len=256,
                     num_logs=16)
-    vitals = bd.register_stream("streamstore0", "vitals.stream", ("hr",),
-                                capacity=64)
+    vitals = bd.register_stream("streamstore0", StreamSpec(
+        "vitals.stream", ("hr",), capacity=64))
     vitals.append({"hr": [72.0, 75.0, 71.0, 78.0]})
     seq = np.arange(64, dtype=np.float64)
-    waves = bd.register_stream("streamstore0",
-                               "mimic2v26.waveform_stream",
-                               ("signal", "hr"), capacity=1024,
-                               shards=2, block_rows=8)
+    waves = bd.register_stream("streamstore0", StreamSpec(
+        "mimic2v26.waveform_stream", ("signal", "hr"), capacity=1024,
+        sharding=Sharding(shards=2, block_rows=8)))
     waves.append({"signal": np.sin(2 * np.pi * seq / 360.0),
                   "hr": 75.0 + seq % 7})
     # event-time pair: 48 rows each on a shared ts axis (ECG offset by
@@ -71,9 +71,10 @@ def build_fixture():
     swap = ts.astype(np.int64) ^ 1                 # 1,0,3,2,5,4,...
     for name, field, offset in (("icu.abp", "abp", 0.0),
                                 ("icu.ecg", "ecg", 0.25)):
-        s = bd.register_stream("streamstore0", name, ("ts", field),
-                               capacity=512, shards=2, block_rows=8,
-                               ts_field="ts", max_delay=4.0)
+        s = bd.register_stream("streamstore0", StreamSpec(
+            name, ("ts", field), capacity=512,
+            sharding=Sharding(shards=2, block_rows=8),
+            event_time=EventTime("ts", max_delay=4.0)))
         value = (90.0 + np.sin(ts) if field == "abp"
                  else np.cos(ts))
         s.append({"ts": (ts + offset)[swap], field: value[swap]})
