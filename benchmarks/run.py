@@ -31,7 +31,7 @@ import traceback
 from typing import Any, Dict, List, Tuple
 
 SUITES = ("fig5", "fig6", "migration", "kernels", "planner", "stream",
-          "serve", "roofline")
+          "serve", "ml", "roofline")
 
 
 def _run_suite(name: str, runs: int) -> List[Tuple[str, float, str]]:
@@ -56,6 +56,9 @@ def _run_suite(name: str, runs: int) -> List[Tuple[str, float, str]]:
     if name == "serve":
         from benchmarks import serve_bench
         return serve_bench.run()
+    if name == "ml":
+        from benchmarks import ml_bench
+        return ml_bench.run()
     if name == "roofline":
         from benchmarks import roofline
         return roofline.run()
@@ -186,6 +189,9 @@ def main() -> None:
                 if name == "serve":
                     from benchmarks import serve_bench
                     report["meta"]["serve"] = dict(serve_bench.LAST_META)
+                if name == "ml":
+                    from benchmarks import ml_bench
+                    report["meta"]["ml"] = dict(ml_bench.LAST_META)
                 for row in rows:
                     row_name, us, derived = row[0], row[1], row[2]
                     kind = row[3] if len(row) > 3 else "time"

@@ -5,6 +5,7 @@ of a BigDAWG setup.  Programmatic API + a small CLI:
   PYTHONPATH=src python -m repro.core.admin streams    # live streaming demo
   PYTHONPATH=src python -m repro.core.admin rebalance  # shard-move demo
   PYTHONPATH=src python -m repro.core.admin joins      # event-time join demo
+  PYTHONPATH=src python -m repro.core.admin ml         # scored-stream demo
 
 See docs/OPERATIONS.md for the status() JSON schema and every knob.
 """
@@ -81,6 +82,10 @@ def status(bd: BigDawg) -> Dict[str, Any]:
     # admission rejects, delivered/dropped results, replicas (the
     # Monitor's copy of FrontDoor.stats(); empty without a front door)
     out["serve"] = snap["serve_stats"]
+    # ml island: inference counters (models loaded, waves, windows
+    # scored, params-cache hits, jax fallbacks) — the Monitor's per-tick
+    # copy of repro.stream.ml.stats(); empty until an ml engine ticks
+    out["ml"] = snap["ml_stats"]
     out["plan_cache"] = dict(bd.planner.plan_cache.stats(),
                              capacity=cfg.cache_size,
                              max_age_seconds=cfg.cache_max_age_seconds)
@@ -145,7 +150,7 @@ def main() -> None:
     ap.add_argument("command",
                     choices=("status", "demo-status", "streams",
                              "rebalance", "joins", "trace", "metrics",
-                             "recover", "serve"))
+                             "recover", "serve", "ml"))
     ap.add_argument("--tenants", type=int, default=4,
                     help="synthetic tenants for the serve demo")
     ap.add_argument("--ticks", type=int, default=8,
@@ -352,6 +357,50 @@ def main() -> None:
         print(json.dumps({
             "serve": st["serve"],
             "delivered_per_tenant": delivered,
+            "standing_queries": sorted(st["streams"]["queries"]),
+        }, indent=1))
+        door.close()
+        return
+    elif args.command == "ml":
+        # ml-island demo: standing anomaly scoring over the jittered
+        # out-of-order ABP/ECG paired-waveform feed.  Every tenant
+        # subscribes the same scored query through the front door, so
+        # warm sharing collapses N tenants to one infer execution per
+        # tick — and the wave scheduler batches the ABP + ECG standing
+        # queries into a single wave per tick.  Scores are mean
+        # next-token NLL under the registered model: windows the model
+        # finds unlikely (rhythm breaks, jitter artifacts) score high.
+        from repro.data.mimic import stream_mimic_paired_waveforms
+        from repro.serve.engine import ServeConfig
+        from repro.serve.frontdoor import FrontDoor
+        bd.register_model("lm")
+        feed = stream_mimic_paired_waveforms(bd, num_batches=args.ticks)
+        last = next(feed)                   # registers the two streams
+        door = FrontDoor(bd, ServeConfig(),
+                         stream_engine="streamstore0",
+                         max_tenants=max(1, args.tenants))
+        scored_abp = ("bdml(infer(ewindow(mimic2v26.abp_stream, 16.0),"
+                      " models.lm, field=abp))")
+        scored_ecg = ("bdml(infer(ewindow(mimic2v26.ecg_stream, 16.0),"
+                      " models.lm, field=ecg))")
+        subs = []
+        for i in range(max(1, args.tenants)):
+            session = door.open_session(f"tenant{i}")
+            subs.append(session.subscribe(scored_abp))
+            if i == 0:
+                session.subscribe(scored_ecg)
+        for last in feed:
+            pass
+        results = subs[0].poll()
+        st = status(bd)
+        print(json.dumps({
+            "feed_tail": last,
+            "ml": st["ml"],
+            "serve": {k: st["serve"].get(k) for k in
+                      ("tenants", "subscriptions", "shared_queries")},
+            "delivered_to_tenant0": len(results),
+            "abp_scores": [round(float(v.columns["score"][0]), 4)
+                           for _, v in results],
             "standing_queries": sorted(st["streams"]["queries"]),
         }, indent=1))
         door.close()

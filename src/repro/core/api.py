@@ -52,6 +52,14 @@ class BigDawg:
         assert s is not None and d is not None, (src, dst)
         self.catalog.add_cast(s.eid, d.eid, method)
 
+    def _ensure_cast(self, src: str, dst: str, method: str) -> None:
+        """register_cast, but idempotent (the ensure_* growers re-run)."""
+        s = self.catalog.engine_by_name(src)
+        d = self.catalog.engine_by_name(dst)
+        if not any(c.method == method for c in
+                   self.catalog.casts_between(s.eid, d.eid)):
+            self.register_cast(src, dst, method)
+
     def register_object(self, engine_name: str, name: str, obj,
                         fields=()) -> None:
         engine = self.engines[engine_name]
@@ -83,6 +91,8 @@ class BigDawg:
             for host in ("hoststore0", "hoststore1"):
                 if host in self.engines:
                     self.register_cast(ename, host, "staged")
+            for ml in [e for e in self.engines if e.startswith("mlhost")]:
+                self._ensure_cast(ename, ml, "staged")
         # only the numbered pool is managed here; a user-added engine
         # like "streamstore_backup" is left alone (and must not break
         # the numeric sort below)
@@ -306,6 +316,61 @@ class BigDawg:
         ``StreamRuntime.rebalance``."""
         return self.streams.rebalance(stream, shard=shard,
                                       to_engine=to_engine)
+
+    # -- ml island (repro.stream.ml) -------------------------------------------
+    def ensure_ml_engines(self, n: int = 1) -> list:
+        """Grow the ml island to ``n`` MLEngines (``mlhost0..mlhost{n-1}``)
+        with the standard casts: staged from every StreamEngine (windows
+        migrate in via ``bdcast``), staged into the relational island
+        (score tables migrate out) and binary into the array island.
+        Idempotent; the ml island is opt-in — ``default_deployment``
+        does not create it, call this (or ``register_model``, which
+        does) before issuing ``bdml`` queries."""
+        from repro.stream.ml import MLEngine
+        names = [f"mlhost{i}" for i in range(max(1, n))]
+        for ename in names:
+            if ename in self.engines:
+                continue
+            self.add_engine(MLEngine(ename, runtime=self.streams,
+                                     engines=self.engines))
+            for src in [e for e in self.engines
+                        if e.startswith("streamstore")]:
+                self._ensure_cast(src, ename, "staged")
+            for host in ("hoststore0", "hoststore1"):
+                if host in self.engines:
+                    self._ensure_cast(ename, host, "staged")
+            if "densehbm0" in self.engines:
+                self._ensure_cast(ename, "densehbm0", "binary")
+        return sorted(e for e in self.engines if e.startswith("mlhost"))
+
+    def register_model(self, alias: str, arch: Optional[str] = None,
+                       engine_name: str = "mlhost0", seed: int = 0):
+        """Register a model handle on the ml island so ``bdml`` queries
+        can score stream windows through it:
+
+            bd.register_model("moe")
+            bd.query("bdml(infer(ewindow(icu.abp, 16.0), models.moe))")
+
+        ``alias`` picks the registry architecture (``lm``/``moe``/
+        ``rwkv6``/``mamba`` map to reduced-config registry archs; a full
+        registry name like ``olmoe-1b-7b`` also works with an explicit
+        ``alias``).  The catalog object is named ``models.<alias>`` —
+        dotted, so the Planner's signature extractor sees it as a
+        referenced object and pins infer reads to the model's home
+        engine.  Params are derived from a fixed seed at first use and
+        cached per (arch, seed), so every deployment (sharded, replayed,
+        front-door) scores with bit-identical weights."""
+        from repro.stream.ml import MLModel, resolve_arch
+        self.ensure_ml_engines(
+            max(1, int(engine_name[len("mlhost"):]) + 1)
+            if engine_name.startswith("mlhost")
+            and engine_name[len("mlhost"):].isdigit() else 1)
+        handle = MLModel(name=f"models.{alias}",
+                         arch=resolve_arch(arch or alias), seed=seed,
+                         home_engine=engine_name)
+        self.register_object(engine_name, handle.name, handle,
+                             fields=("window", "rows", "score"))
+        return handle
 
     def register_continuous(self, bql: str, every_n_ticks: int = 1,
                             name: Optional[str] = None) -> ContinuousQuery:

@@ -18,7 +18,8 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 ISLAND_TOKENS = {"bdrel": "relational", "bdarray": "array",
-                 "bdtext": "text", "bdstream": "streaming"}
+                 "bdtext": "text", "bdstream": "streaming",
+                 "bdml": "ml"}
 ALL_TOKENS = tuple(ISLAND_TOKENS) + ("bdcast", "bdcatalog")
 
 

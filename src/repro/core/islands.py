@@ -47,6 +47,11 @@ ISLANDS = {
                     "rate", "snapshot", "watermark", "flush"),
         # windows materialize as arrays; snapshots/rates/joins as tables
         result_type=(dm.ArrayObject, dm.Table)),
+    "ml": Island(
+        name="ml", data_model="model-scored stream windows",
+        operations=("infer",),
+        # per-window score rows
+        result_type=dm.Table),
 }
 
 

@@ -83,6 +83,12 @@ class Monitor:
         # tenants, subscriptions, shared queries, admission rejects,
         # delivered/dropped results, replica counts)
         self.serve_stats: Dict[str, Any] = {}
+        # ml-island inference health: the repro.stream.ml.stats() block
+        # (models loaded, waves, windows scored, params-cache hits,
+        # fallbacks).  Process-wide like the jit stats — the model/param
+        # caches are keyed per arch internally but the counters are
+        # global.
+        self.ml_stats: Dict[str, Any] = {}
 
     # -- benchmark API (paper naming) ----------------------------------------
     def add_benchmarks(self, signature: Signature, lean: bool,
@@ -313,6 +319,16 @@ class Monitor:
         with self._lock:
             self.jit_stats = dict(stats)
 
+    def observe_ml(self, stats: Dict[str, Any]) -> None:
+        """Record the ml island's inference counters (the
+        ``repro.stream.ml.stats()`` block: models loaded, waves,
+        standing infer executions, windows scored, params-cache
+        hits/misses, jax-absent fallbacks).  StreamRuntime.tick feeds
+        this once per tick next to the jit stats;
+        admin.status()["ml"] shows it."""
+        with self._lock:
+            self.ml_stats = dict(stats)
+
     def observe_durability(self, stream_name: str,
                            stats: Dict[str, Any]) -> None:
         """Record a durable stream's segment-log/checkpoint counters
@@ -456,6 +472,7 @@ class Monitor:
                 "ingest_stats": {k: dict(v)
                                  for k, v in self.ingest_stats.items()},
                 "jit_stats": dict(self.jit_stats),
+                "ml_stats": dict(self.ml_stats),
                 "durability_stats": {
                     k: dict(v)
                     for k, v in self.durability_stats.items()},

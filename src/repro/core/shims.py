@@ -326,4 +326,7 @@ def execute(island: str, engine: Engine, query: str):
     if island == "streaming":
         from repro.stream.shim import execute_stream
         return execute_stream(engine, query)
+    if island == "ml":
+        from repro.stream.ml import execute_ml
+        return execute_ml(engine, query)
     raise ValueError(f"unknown island {island}")

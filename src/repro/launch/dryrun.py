@@ -141,9 +141,12 @@ def build_lowered(arch: str, shape_name: str, mesh, *,
                   remat=None, capacity_factor=None, donate: bool = True,
                   scan_layers: bool = True, vocab_pad_to=None,
                   kv_cache_dtype=None, shard_ctx_train=None,
-                  moe_cap_shard=None):
+                  moe_cap_shard=None, moe_dropless: bool = False):
     cfg = registry.get_config(arch)
-    overrides = {}
+    # dry-run lowers the at-scale shapes: use the capacity-clipped sort
+    # dispatch (the O(tokens*k*D) design the cost probes are about), not
+    # the dropless reference path (see models/moe.py docstring)
+    overrides = {"moe_dropless": moe_dropless}
     if remat is not None:
         overrides["remat"] = remat
     if capacity_factor is not None:

@@ -40,7 +40,12 @@ class ModelConfig:
     moe_offset: int = 0
     first_k_dense: int = 0            # leading dense layers (deepseek-moe)
     dense_d_ff: int = 0               # d_ff for those leading dense layers
-    capacity_factor: float = 1.25
+    capacity_factor: float = 1.25     # capacity path only (moe_dropless=False)
+    # Dropless (exact) MoE is the reference semantic: forward ≡ decode and
+    # per-token results don't depend on batch composition.  The capacity-
+    # clipped sort dispatch is the at-scale training approximation; the
+    # launch dry-run opts into it explicitly (see moe.py docstring).
+    moe_dropless: bool = True
 
     # hybrid / ssm
     attn_every: int = 1               # attention on layers where i % attn_every == attn_offset

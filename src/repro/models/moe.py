@@ -1,12 +1,28 @@
-"""Mixture-of-Experts FFN with sort-based (megablocks-style) dispatch.
+"""Mixture-of-Experts FFN: dropless reference path + sort-based
+(megablocks-style) capacity dispatch for the at-scale dry-run path.
 
 Design notes (DESIGN.md §7):
-* Dispatch is *sort-based*, not GShard one-hot-einsum: a (tokens*k) argsort by
-  expert id, a capacity-clipped scatter into an (E, C, D) buffer, a batched
-  expert GEMM, and a weighted scatter-add combine.  This keeps dispatch cost
-  O(tokens*k*D) bytes instead of O(tokens*E*C) FLOPs, which at the assigned
-  shapes (1M tokens, 64 experts) is the difference between a viable layer and
-  a dispatch tensor that dwarfs the expert GEMMs.
+* The *reference* path (``cfg.moe_dropless``, the default) is exactly
+  dropless: every routed token-slot contributes, so a token's output
+  depends only on its own row — forward ≡ prefill+decode and the result
+  is invariant to what else shares the batch.  This matches the actual
+  training recipes of the assigned MoE archs (OLMoE trains without token
+  dropping, arXiv:2409.02060 §2; Jamba/DeepSeek-MoE serve dropless) and
+  is the invariant the serve/bdml paths build on.  Capacity-clipped
+  dispatch silently *dropped over-capacity slots* — and because dispatch
+  sorts slots in token order, the drops land on the LAST tokens of the
+  batch, exactly the positions decode recomputes exactly: that was the
+  root cause of the olmoe-1b-7b decode/forward drift (and part of the
+  jamba-v0.1-52b multi-step drift) carried since PR 1.
+* The *capacity* path (``moe_dropless=False``: sort-based dispatch — a
+  (tokens*k) argsort by expert id, a capacity-clipped scatter into an
+  (E, C, D) buffer, a batched expert GEMM, and a weighted scatter-add
+  combine) keeps dispatch cost O(tokens*k*D) bytes instead of
+  O(tokens*E*C) FLOPs, which at the assigned shapes (1M tokens, 64
+  experts) is the difference between a viable layer and a dispatch
+  tensor that dwarfs the expert GEMMs.  The launch dry-run selects it
+  explicitly (its cost probes are about those shapes); it is a
+  throughput approximation, not reference semantics.
 * Expert weights carry logical axis EXPERT -> mesh ``model`` (expert
   parallelism); the buffer is constrained the same way so XLA SPMD emits the
   canonical all-to-all on dispatch/combine.
@@ -65,9 +81,47 @@ def route(params: dict, xt: jax.Array, cfg: ModelConfig
     return gate, expert_ids, aux
 
 
+def _apply_moe_dropless(params: dict, x: jax.Array, cfg: ModelConfig, rules
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Exact dropless MoE: dense per-expert compute, gate-masked combine.
+
+    Every routed slot contributes, so out[b, s] is a pure function of
+    x[b, s] — no cross-token capacity coupling.  O(T*E*F) FLOPs; fine for
+    the reduced/serving configs, the capacity path below covers the
+    1M-token dry-run shapes.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e = cfg.num_experts
+    dt = x.dtype
+
+    xt = x.reshape(t, d)
+    xt = L.constrain(xt, rules, (L.BATCH, L.ACT_EMBED))
+    gate, expert_ids, aux = route(params, xt, cfg)
+
+    # combine weights (T, E): gate mass each token sends to each expert
+    # (top-k ids are distinct, so the scatter-add never collides per row)
+    w = jnp.zeros((t, e), dt).at[
+        jnp.arange(t)[:, None], expert_ids].add(gate.astype(dt))
+
+    gate_h = jnp.einsum("td,edf->tef", xt, params["wi_gate"].astype(dt))
+    up_h = jnp.einsum("td,edf->tef", xt, params["wi_up"].astype(dt))
+    h = jax.nn.silu(gate_h) * up_h
+    out_e = jnp.einsum("tef,efd->ted", h, params["wo"].astype(dt))
+    y = jnp.einsum("ted,te->td", out_e, w)
+    y = L.constrain(y, rules, (L.BATCH, L.ACT_EMBED))
+
+    out = y.reshape(b, s, d)
+    if cfg.num_shared_experts:
+        out = out + layers.apply_ffn(params["shared"], x, "swiglu", rules)
+    return L.constrain(out, rules, (L.BATCH, L.SEQ, L.ACT_EMBED)), aux
+
+
 def apply_moe(params: dict, x: jax.Array, cfg: ModelConfig, rules
               ) -> Tuple[jax.Array, jax.Array]:
     """x: (B, S, D) -> (out (B,S,D), aux_loss)."""
+    if cfg.moe_dropless:
+        return _apply_moe_dropless(params, x, cfg, rules)
     b, s, d = x.shape
     t = b * s
     e, k = cfg.num_experts, cfg.top_k

@@ -137,6 +137,51 @@ class ServeSession:
                 for i, r in enumerate(requests)]
 
 
+class TickWaveScheduler:
+    """Incremental wave scheduler for standing-query work.
+
+    ``Scheduler`` below packs a FIFO of requests into waves up front;
+    streaming work arrives differently — one standing ``infer`` query at
+    a time within a StreamRuntime tick, with no point where the whole
+    batch is visible.  This variant opens a wave on the first submission
+    carrying a new key (the tick number) and accounts every later
+    same-key submission to the open wave, so N concurrent standing
+    queries cost one wave per tick.  Work still executes per submission
+    at its canonical shape: a wave batches scheduling, compilation-cache
+    reuse and observability, never the GEMM shapes — results stay
+    bitwise independent of what else shares the wave (the same
+    batch-composition independence the dropless MoE path guarantees).
+    """
+
+    def __init__(self, span_name: str = "ml/wave") -> None:
+        self.span_name = span_name
+        self.waves = 0                 # waves opened (lifetime)
+        self.submissions = 0           # work items (lifetime)
+        self.current_batch = 0         # items in the open wave
+        self._key: Optional[Any] = None
+
+    def submit(self, key, fn):
+        """Run ``fn`` inside the wave for ``key``, opening one if the
+        key is new.  Returns ``fn()``'s result; exceptions propagate
+        after the submission is accounted (the wave survives — later
+        same-tick queries still join it)."""
+        if key != self._key:
+            self._key = key
+            self.waves += 1
+            self.current_batch = 0
+            metrics.counter("repro_ml_waves_total",
+                            "standing-infer waves opened").inc()
+        self.current_batch += 1
+        self.submissions += 1
+        with trace.span(self.span_name, wave=self.waves,
+                        batch=self.current_batch):
+            return fn()
+
+    def stats(self) -> Dict[str, int]:
+        return {"waves": self.waves, "submissions": self.submissions,
+                "current_batch": self.current_batch}
+
+
 class Scheduler:
     """Wave scheduler: FIFO queue packed into max_batch waves.
 

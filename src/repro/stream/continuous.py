@@ -168,7 +168,7 @@ class StreamRuntime:
             cq._root = root
             cq.event_time = any(
                 isinstance(node, bql.IslandQueryNode)
-                and node.island == "streaming"
+                and node.island in ("streaming", "ml")
                 and _EVENT_TIME_OPS_RE.search(node.query)
                 for node in root.walk())
             # only count drops/lates that happen within this query's
@@ -202,8 +202,11 @@ class StreamRuntime:
         if cq._stream_set != names:
             refs = set()
             for node in cq._root.walk():
+                # ml nodes (infer over window/ewindow) read streams too:
+                # their drops/lates/watermarks gate the query like a
+                # streaming node's would
                 if (isinstance(node, bql.IslandQueryNode)
-                        and node.island == "streaming"):
+                        and node.island in ("streaming", "ml")):
                     refs.update(signatures._referenced_objects(
                         node, engines_have=lambda tok: tok in streams))
             cq._stream_refs = tuple(sorted(refs & names))
@@ -412,6 +415,14 @@ class StreamRuntime:
         # Monitor/admin view tracks the jit lane's health live
         from repro.stream import compile as query_compile
         self.monitor.observe_jit(query_compile.stats())
+        # ml-island inference counters (waves, windows scored, params
+        # cache, fallbacks) — same cadence and shape as the jit block.
+        # sys.modules, not an import: the ml module pulls in the model
+        # registry, a cost deployments without an ml engine never pay
+        import sys
+        query_ml = sys.modules.get("repro.stream.ml")
+        if query_ml is not None:
+            self.monitor.observe_ml(query_ml.stats())
         return ran
 
     def run_ticks(self, n: int) -> List[List[Tuple[str, Any]]]:

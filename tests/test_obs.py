@@ -423,7 +423,7 @@ def test_status_consistent_while_monitoring_task_mutates():
             json.dumps(st)                    # serializable mid-mutation
             assert set(st) == {"engines", "islands", "monitor",
                                "concurrency", "streams", "plan_cache",
-                               "catalog", "serve"}
+                               "catalog", "serve", "ml"}
             assert "watermarks" in st["streams"]
             json.loads(bd.monitor.to_json())
     finally:

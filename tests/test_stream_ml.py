@@ -1,0 +1,282 @@
+"""ml-island tests: ``bdml(infer(...))`` scores stream windows through
+the model registry and the result is **bitwise** a direct
+``registry.forward`` on the same rows — plain, sliding, sharded,
+event-time and replayed-after-recovery streams all included — plus the
+wave scheduler's one-wave-per-tick accounting, front-door scored
+subscriptions ≡ direct standing queries, the jax-absent fallback, and
+the admin/Monitor surface.  The CI jit-parity lane re-runs this file
+under both REPRO_QUERY_BACKEND values: the inner window gather rides
+the compiled stream path, so everything here must hold on both.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import admin
+from repro.core.api import default_deployment
+from repro.models import registry
+from repro.sharding import logical as L
+from repro.stream import ml
+from repro.stream.spec import Durability, EventTime, Sharding, StreamSpec
+
+ARCH = "qwen2-1.5b"          # the "lm" alias; smallest forward in the pool
+W = 16
+
+
+def direct_score(values, arch=ARCH, seed=0):
+    """The reference the island must match bitwise: quantize the rows,
+    run a plain eager ``registry.forward``, mean next-token NLL in f32."""
+    cfg = registry.get_config(arch, reduced=True)
+    params = L.init_params(jax.random.PRNGKey(seed),
+                           registry.param_specs(cfg))
+    toks = ml.quantize(np.asarray(values, np.float64), cfg.vocab_size)
+    logits, _ = registry.forward(
+        params, {"tokens": jnp.asarray(toks[None, :], jnp.int32)}, cfg,
+        None)
+    logp = jax.nn.log_softmax(logits[0, :-1].astype(jnp.float32), -1)
+    nll = -jnp.take_along_axis(logp, jnp.asarray(toks[1:, None]),
+                               -1)[..., 0]
+    return nll.mean()
+
+
+def _deploy(spec=None):
+    bd = default_deployment()
+    bd.register_model("lm")
+    if spec is not None:
+        bd.register_stream("streamstore0", spec)
+    return bd
+
+
+def _rows(n=W, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"ts": np.arange(float(n)),
+            "hr": 70 + 8 * np.sin(np.arange(n) / 3)
+            + rng.standard_normal(n)}
+
+
+# -- bit-identity: infer ≡ direct registry.forward ---------------------------
+def test_infer_matches_direct_forward_bitwise():
+    bd = _deploy(StreamSpec("vitals.hr", ("ts", "hr"), capacity=64))
+    rows = _rows()
+    bd.engines["streamstore0"].get("vitals.hr").append(rows)
+    out = bd.query(f"bdml(infer(window(vitals.hr, {W}), models.lm))").value
+    assert out.columns["score"].dtype == jnp.float32
+    assert int(out.columns["rows"][0]) == W
+    want = direct_score(rows["hr"])
+    err = float(jnp.abs(out.columns["score"][0] - want))
+    assert err == 0.0, f"infer vs direct forward: {err:.3e}"
+
+
+def test_infer_sliding_windows_each_match_direct():
+    bd = _deploy(StreamSpec("vitals.hr", ("ts", "hr"), capacity=64))
+    rows = _rows(2 * W)
+    bd.engines["streamstore0"].get("vitals.hr").append(rows)
+    out = bd.query(
+        f"bdml(infer(window(vitals.hr, {W}, {W}), models.lm))").value
+    n = int(out.columns["window"].shape[0])
+    assert n == 2
+    for i in range(n):
+        want = direct_score(rows["hr"][i * W:(i + 1) * W])
+        err = float(jnp.abs(out.columns["score"][i] - want))
+        assert err == 0.0, f"window {i}: {err:.3e}"
+
+
+def test_infer_field_kwarg_and_defaults():
+    bd = _deploy(StreamSpec("vitals.hr", ("ts", "hr"), capacity=64))
+    rows = _rows()
+    bd.engines["streamstore0"].get("vitals.hr").append(rows)
+    q = f"bdml(infer(window(vitals.hr, {W}), models.lm, field=%s))"
+    explicit = bd.query(q % "hr").value
+    default = bd.query(
+        f"bdml(infer(window(vitals.hr, {W}), models.lm))").value
+    # the default field skips the ts column and picks hr
+    assert float(explicit.columns["score"][0]) == \
+        float(default.columns["score"][0])
+    ts_scored = bd.query(q % "ts").value
+    want = direct_score(rows["ts"])
+    assert float(jnp.abs(ts_scored.columns["score"][0] - want)) == 0.0
+
+
+def test_sharded_scores_match_unsharded_bitwise():
+    rows = _rows(2 * W, seed=3)
+    plain = _deploy(StreamSpec("vitals.hr", ("ts", "hr"), capacity=64))
+    plain.engines["streamstore0"].get("vitals.hr").append(rows)
+    sharded = _deploy(StreamSpec(
+        "vitals.hr", ("ts", "hr"), capacity=64,
+        sharding=Sharding(shards=2, num_engines=2)))
+    sharded.engines["streamstore0"].get("vitals.hr").append(rows)
+    q = f"bdml(infer(window(vitals.hr, {W}, {W}), models.lm))"
+    a = plain.query(q).value
+    b = sharded.query(q).value
+    np.testing.assert_array_equal(np.asarray(a.columns["score"]),
+                                  np.asarray(b.columns["score"]))
+
+
+def test_event_time_window_scores_match_direct():
+    bd = _deploy(StreamSpec(
+        "icu.abp", ("ts", "abp"), capacity=128,
+        event_time=EventTime("ts", max_delay=4.0)))
+    s = bd.engines["streamstore0"].get("icu.abp")
+    rng = np.random.default_rng(7)
+    ts = np.arange(24.0)
+    order = np.argsort(ts + rng.uniform(-2, 2, ts.shape[0]))
+    s.append({"ts": ts[order], "abp": (80 + ts)[order]})
+    s.flush()                              # close every window
+    view = bd.query("bdstream(ewindow(icu.abp, 16.0))").value
+    out = bd.query(
+        "bdml(infer(ewindow(icu.abp, 16.0), models.lm))").value
+    want = direct_score(np.asarray(view.attrs["abp"], np.float64))
+    err = float(jnp.abs(out.columns["score"][0] - want))
+    assert err == 0.0, f"event-time infer vs direct: {err:.3e}"
+    # gathered window is event-time ordered regardless of arrival order
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(view.attrs["ts"])), np.asarray(view.attrs["ts"]))
+
+
+def test_replayed_durable_stream_scores_identically(tmp_path):
+    spec = StreamSpec("vitals.hr", ("ts", "hr"), capacity=64,
+                      durability=Durability(str(tmp_path / "wal"),
+                                            checkpoint_every_rows=8))
+    bd = _deploy(spec)
+    stream = bd.engines["streamstore0"].get("vitals.hr")
+    stream.append(_rows(seed=11))
+    q = f"bdml(infer(window(vitals.hr, {W}), models.lm))"
+    before = bd.query(q).value
+    stream._durable.close()
+    bd2 = default_deployment()             # the "restart"
+    bd2.recover_stream("streamstore0", str(tmp_path / "wal"))
+    bd2.register_model("lm")
+    after = bd2.query(q).value
+    np.testing.assert_array_equal(np.asarray(before.columns["score"]),
+                                  np.asarray(after.columns["score"]))
+
+
+# -- wave scheduling ----------------------------------------------------------
+def test_standing_infer_queries_share_one_wave_per_tick():
+    bd = _deploy(StreamSpec("vitals.hr", ("ts", "hr"), capacity=64))
+    bd.engines["streamstore0"].get("vitals.hr").append(_rows())
+    n = 3
+    for i in range(n):
+        bd.register_continuous(
+            f"bdml(infer(window(vitals.hr, {W}), models.lm))"
+            if i == 0 else
+            f"bdml(infer(window(vitals.hr, {W}), models.lm, field=hr))",
+            name=f"scored{i}")
+    s0 = ml.stats()
+    ran = bd.streams.tick()
+    s1 = ml.stats()
+    assert len(ran) == n
+    assert s1["waves"] - s0["waves"] == 1
+    assert s1["wave_submissions"] - s0["wave_submissions"] == n
+    assert s1["infer_executions"] - s0["infer_executions"] == n
+    bd.streams.tick()
+    s2 = ml.stats()
+    assert s2["waves"] - s1["waves"] == 1
+
+
+def test_params_cache_shared_across_queries():
+    bd = _deploy(StreamSpec("vitals.hr", ("ts", "hr"), capacity=64))
+    bd.engines["streamstore0"].get("vitals.hr").append(_rows())
+    q = f"bdml(infer(window(vitals.hr, {W}), models.lm))"
+    s0 = ml.stats()
+    bd.query(q)
+    bd.query(q)
+    s1 = ml.stats()
+    # the (arch, seed) entry was loaded at most once this test; the
+    # second execution is always a cache hit
+    assert s1["params_cache_hits"] - s0["params_cache_hits"] >= 1
+    assert ("qwen2-1.5b", 0) in ml._LOADED
+
+
+# -- front door ---------------------------------------------------------------
+def test_frontdoor_scored_subscription_matches_direct():
+    from repro.serve.engine import ServeConfig
+    from repro.serve.frontdoor import FrontDoor
+    bd = _deploy()
+    door = FrontDoor(bd, ServeConfig(streams=(
+        StreamSpec("vitals.hr", ("ts", "hr"), capacity=64),)),
+        stream_engine="streamstore0")
+    q = f"bdml(infer(window(vitals.hr, {W}), models.lm))"
+    sub_a = door.open_session("a").subscribe(q)
+    sub_b = door.open_session("b").subscribe(q)
+    direct = bd.register_continuous(q, name="direct")
+    bd.engines["streamstore0"].get("vitals.hr").append(_rows(seed=5))
+    bd.streams.tick()
+    got_a, got_b = sub_a.poll(), sub_b.poll()
+    assert len(got_a) == 1 and len(got_b) == 1
+    sa = np.asarray(got_a[0][1].columns["score"])
+    sb = np.asarray(got_b[0][1].columns["score"])
+    sd = np.asarray(direct.last_value.columns["score"])
+    np.testing.assert_array_equal(sa, sd)
+    np.testing.assert_array_equal(sb, sd)
+    # warm sharing: both tenants rode ONE shared standing query
+    assert door.stats()["shared_queries"] == 1
+    door.close()
+
+
+# -- failure modes ------------------------------------------------------------
+def test_incomplete_window_is_transient():
+    from repro.core.executor import (DataUnavailableException,
+                                     LocalQueryExecutionException)
+    bd = _deploy(StreamSpec("vitals.hr", ("ts", "hr"), capacity=64))
+    bd.engines["streamstore0"].get("vitals.hr").append(_rows(n=4))
+    with pytest.raises(LocalQueryExecutionException) as exc:
+        bd.query(f"bdml(infer(window(vitals.hr, {W}), models.lm))")
+    # the cause chain carries the transient marker (plan-cache survival)
+    assert isinstance(exc.value.__cause__, DataUnavailableException)
+    # standing queries survive it: the error is isolated per tick
+    cq = bd.register_continuous(
+        f"bdml(infer(window(vitals.hr, {W}), models.lm))", name="scored")
+    bd.streams.tick()
+    assert cq.errors == 1 and cq.executions == 0
+
+
+def test_jax_absent_is_graceful(monkeypatch):
+    bd = _deploy(StreamSpec("vitals.hr", ("ts", "hr"), capacity=64))
+    bd.engines["streamstore0"].get("vitals.hr").append(_rows())
+    cq = bd.register_continuous(
+        f"bdml(infer(window(vitals.hr, {W}), models.lm))", name="scored")
+    monkeypatch.setattr(ml, "JAX_AVAILABLE", False)
+    s0 = ml.stats()
+    with pytest.raises(Exception, match="jax"):
+        bd.query(f"bdml(infer(window(vitals.hr, {W}), models.lm))")
+    ran = bd.streams.tick()                # the tick itself survives
+    assert ran == []
+    assert cq.errors == 1 and "jax" in cq.last_error
+    assert ml.stats()["fallbacks"] - s0["fallbacks"] == 2
+    monkeypatch.setattr(ml, "JAX_AVAILABLE", True)
+    bd.streams.tick()
+    assert cq.executions == 1              # recovered on the next tick
+
+
+def test_unknown_model_and_bad_args():
+    bd = _deploy(StreamSpec("vitals.hr", ("ts", "hr"), capacity=64))
+    bd.engines["streamstore0"].get("vitals.hr").append(_rows())
+    with pytest.raises(Exception, match="not registered"):
+        bd.query(f"bdml(infer(window(vitals.hr, {W}), models.nope))")
+    with pytest.raises(Exception, match="no field"):
+        bd.query(f"bdml(infer(window(vitals.hr, {W}), models.lm,"
+                 f" field=bogus))")
+    with pytest.raises(ml.MLException, match="unknown model"):
+        ml.resolve_arch("not-an-arch")
+    assert ml.resolve_arch("moe") == "olmoe-1b-7b"
+    assert ml.resolve_arch("qwen2-1.5b") == "qwen2-1.5b"
+
+
+# -- surface ------------------------------------------------------------------
+def test_admin_status_and_planner_pinning():
+    bd = _deploy(StreamSpec("vitals.hr", ("ts", "hr"), capacity=64))
+    bd.engines["streamstore0"].get("vitals.hr").append(_rows())
+    resp = bd.query(f"bdml(infer(window(vitals.hr, {W}), models.lm))")
+    # the ml branch pins the read to the model's home engine: one plan
+    assert resp.plans_considered == 1
+    assert "mlhost0" in resp.qep_id
+    bd.streams.tick()
+    st = admin.status(bd)
+    assert st["ml"]["jax_available"] is True
+    for key in ("models_loaded", "waves", "windows_scored",
+                "infer_executions", "fallbacks"):
+        assert key in st["ml"], key
+    assert "mlhost0" in st["islands"]["ml"]
+    assert st["engines"]["mlhost0"]["kind"] == "mlserve"
